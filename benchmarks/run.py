@@ -1,0 +1,63 @@
+"""Benchmark orchestrator — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (harness contract).
+
+Mapping to the paper:
+  fig1_*       Figure 1   — per-update efficiency of clipping schemes
+  table1_*     Tables 1/11, Figure 3 — fixed vs adaptive per-layer utility
+  table4_*     Tables 4/12 — epoch-constrained adaptive-per-layer vs flat
+  table6_*     Table 6 / Sec 4 — per-device clipping communication
+  fig5/6_*     Figures 5/6, Table 10 — quantile & allocation ablations
+  kernel_*     ghost-norm op microbenches (Sec 3.1 fused op)
+  roofline_*   EXPERIMENTS.md §Roofline (from the multi-pod dry-run)
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only PREFIX]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-size benches (slower)")
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose module name contains this")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_epochs, bench_kernels, bench_quantile,
+                            bench_scaling, bench_throughput, bench_utility,
+                            roofline)
+    suites = [
+        ("throughput", bench_throughput),
+        ("kernels", bench_kernels),
+        ("utility", bench_utility),
+        ("epochs", bench_epochs),
+        ("quantile", bench_quantile),
+        ("scaling", bench_scaling),
+        ("roofline", roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            for line in mod.run(quick=quick):
+                print(line, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name}_SUITE_ERROR,0,{type(e).__name__}:{e}",
+                  flush=True)
+        print(f"# suite {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

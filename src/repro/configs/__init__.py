@@ -1,0 +1,52 @@
+"""Assigned-architecture registry.
+
+Every architecture is selectable as ``--arch <id>``; each module defines
+CONFIG (the exact assigned numbers, source cited) and REDUCED (a 2-layer,
+d_model<=512, <=4-expert variant of the same family for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+ARCH_IDS = [
+    "qwen3-4b",
+    "granite-moe-3b-a800m",
+    "zamba2-7b",
+    "deepseek-67b",
+    "whisper-medium",
+    "deepseek-v3-671b",
+    "rwkv6-7b",
+    "qwen1.5-32b",
+    "qwen2-vl-72b",
+    "minicpm-2b",
+]
+
+
+def _module(arch_id: str):
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+def get_config(arch_id: str, *, reduced: bool = False,
+               variant: str | None = None) -> ModelConfig:
+    """Load an architecture config. variant='swa' selects the documented
+    sliding-window flavor (long_500k support for dense archs)."""
+    m = _module(arch_id)
+    cfg = m.REDUCED if reduced else m.CONFIG
+    if variant == "swa":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, sliding_window=4096,
+                                  name=cfg.name + "-swa")
+    elif variant not in (None, "base"):
+        raise ValueError(f"unknown variant {variant!r}")
+    return cfg
+
+
+def list_archs() -> list[str]:
+    return list(ARCH_IDS)
+
+
+__all__ = ["ARCH_IDS", "get_config", "list_archs", "INPUT_SHAPES",
+           "InputShape", "ModelConfig"]

@@ -1,0 +1,24 @@
+"""repro.core — the paper's contribution: group-wise clipping for DP-SGD.
+
+Public API:
+  accounting     RDP accountant, sigma calibration, Prop 3.1 budget split
+  quantile       private quantile tracking for adaptive thresholds
+  noise          noise allocation strategies (global / equal-budget / weighted)
+  ghost          per-example grad norms without per-example grads
+  dp_layers      clip-in-backprop custom_vjp primitives
+  clipping       mode drivers (per_layer / ghost_flat / per_group / ...)
+  dp_sgd         DPConfig + train-step factory (Algorithm 1)
+  lora           DP LoRA (the paper's GPT-3 recipe)
+  spec           parameter/group bookkeeping (P, GroupLayout)
+"""
+from repro.core import accounting, clipping, dp_layers, dp_sgd, ghost, lora, noise, quantile, spec
+from repro.core.clipping import MODES, ClipResult, dp_clipped_gradients
+from repro.core.dp_sgd import DPConfig, DPPlan, DPState, build_plan, make_dp_train_step
+from repro.core.spec import GroupLayout, P, abstract_params, init_params
+
+__all__ = [
+    "accounting", "clipping", "dp_layers", "dp_sgd", "ghost", "lora",
+    "noise", "quantile", "spec", "MODES", "ClipResult",
+    "dp_clipped_gradients", "DPConfig", "DPPlan", "DPState", "build_plan",
+    "make_dp_train_step", "GroupLayout", "P", "abstract_params", "init_params",
+]

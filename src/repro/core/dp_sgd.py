@@ -1,0 +1,354 @@
+"""DP optimization: Algorithm 1 (adaptive per-layer DP-SGD) and friends.
+
+Wires together:  clipping driver (core.clipping)  +  private quantile
+estimation (core.quantile)  +  noise allocation (core.noise)  +  RDP
+accounting incl. the Prop 3.1 budget split (core.accounting)  +  any
+first-order optimizer with an optax-like (init, update) interface
+(repro.optim) — the paper notes the scheme applies to DP-Adam etc.
+
+The factory precomputes all python-float accounting at build time; the
+returned step function is pure and jit/pjit-friendly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import accounting, noise as noise_lib
+from repro.core.clipping import LossFn, dp_clipped_gradients
+from repro.core.quantile import QuantileState, clip_counts, init_quantile_state, update_thresholds
+from repro.core.spec import GroupLayout, P, SpecTree, _walk
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Configuration of the private learning run."""
+
+    mode: str = "per_layer"  # non_private|per_layer|ghost_flat|per_group|naive_flat
+    # --- privacy budget ---
+    epsilon: float | None = 8.0
+    delta: float = 1e-5
+    sampling_rate: float = 0.01  # rho = B / N  (Poisson subsampling)
+    steps: int = 1000  # T, for accounting
+    sigma: float | None = None  # direct noise-multiplier override (skips calibration)
+    # --- thresholds ---
+    adaptive: bool = True  # adaptive (quantile-tracked) vs fixed thresholds
+    init_threshold: float = 1.0  # C_k(0) (per-layer) or C (flat)
+    target_quantile: float = 0.5  # q
+    quantile_lr: float = 0.3  # eta (paper uses 0.3 everywhere)
+    quantile_budget_fraction: float = 0.01  # r in (0,1)
+    # --- noise allocation (Sec 3.3) ---
+    noise_strategy: str = "global"  # global | equal_budget | weighted
+    # Appendix A.1 protocol: rescale adaptive per-layer thresholds to an
+    # equivalent GLOBAL threshold C, i.e. use C_k_eff = C * C_k / ||C||_2.
+    # The tracker learns the cross-layer SHAPE; total clipping budget (and
+    # hence noise scale) stays comparable to flat clipping at threshold C.
+    threshold_rescale: float | None = None
+    # --- per_group / per-device mode ---
+    group_assignment: tuple[int, ...] | None = None  # layout-group -> supergroup
+    # --- misc ---
+    noise_dtype: Any = jnp.float32
+    microbatches: int = 1  # gradient accumulation (Algorithm 2 structure):
+    #   per-example clipping commutes with microbatch accumulation, so the
+    #   clipped sums and norms are EXACTLY those of the monolithic batch;
+    #   noise is added once per minibatch (Alg. 2 line 6).
+    batch_axes: tuple[str, ...] | None = None  # mesh axes of the batch dim.
+    #   Needed when microbatches > 1 under pjit: the (B,) -> (nmb, mb) split
+    #   is reshard-ambiguous and GSPMD may scatter the data axis across BOTH
+    #   new dims (catastrophic per-iteration collectives); this pins the
+    #   microbatch dim replicated and the example dim on the data plane.
+
+    @property
+    def private(self) -> bool:
+        return self.mode != "non_private"
+
+
+class DPState(NamedTuple):
+    qstate: QuantileState  # K (or G) adaptive thresholds
+    step: jax.Array  # scalar int32
+
+
+class StepMetrics(NamedTuple):
+    loss: jax.Array
+    clip_fraction: jax.Array  # mean over groups of fraction clipped
+    mean_threshold: jax.Array
+    grad_norm: jax.Array  # norm of the (noised, averaged) update direction
+
+
+@dataclasses.dataclass(frozen=True)
+class DPPlan:
+    """Everything precomputed at build time (python floats, accounting)."""
+
+    config: DPConfig
+    num_noise_groups: int  # K for per_layer, 1 for flat, G for per_group
+    sigma: float  # total-budget noise multiplier (no quantile split)
+    sigma_b: float  # clip-count noise multiplier (0 if not adaptive)
+    sigma_new: float  # gradient noise multiplier after the Prop 3.1 split
+    group_dims: np.ndarray  # (num_noise_groups,) parameter counts
+    sens_mults: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(0, np.float32))
+
+
+def build_plan(cfg: DPConfig, layout: GroupLayout) -> DPPlan:
+    if not cfg.private:
+        return DPPlan(cfg, 0, 0.0, 0.0, 0.0, np.zeros(0, np.int64))
+    mults = layout.sens_mults
+    if cfg.mode in ("ghost_flat", "naive_flat"):
+        num_groups = 1
+        dims = np.array([int(layout.dims.sum())], np.int64)
+        mults = np.ones(1, np.float32)
+    elif cfg.mode == "per_group":
+        if cfg.group_assignment is None:
+            raise ValueError("per_group mode requires group_assignment")
+        assign = np.asarray(cfg.group_assignment)
+        if assign.shape != (layout.num_groups,):
+            raise ValueError(
+                f"group_assignment must have shape ({layout.num_groups},)")
+        num_groups = int(assign.max()) + 1
+        dims = np.zeros(num_groups, np.int64)
+        np.add.at(dims, assign, layout.dims)
+        m = np.ones(num_groups, np.float32)
+        np.maximum.at(m, assign, layout.sens_mults)
+        mults = m
+    else:  # per_layer (incl. per-shard blocked layouts)
+        num_groups = layout.num_groups
+        dims = layout.dims
+    if cfg.sigma is not None:
+        sigma = float(cfg.sigma)
+    else:
+        if cfg.epsilon is None:
+            raise ValueError("need epsilon or sigma")
+        sigma = accounting.calibrate_sigma(
+            target_eps=cfg.epsilon, sampling_rate=cfg.sampling_rate,
+            steps=cfg.steps, delta=cfg.delta)
+    if cfg.adaptive:
+        sigma_b = accounting.sigma_b_for_fraction(
+            sigma, num_groups, cfg.quantile_budget_fraction)
+        split = accounting.split_noise_multiplier(sigma, sigma_b, num_groups)
+        sigma_new = split.sigma_new
+    else:
+        sigma_b, sigma_new = 0.0, sigma
+    return DPPlan(cfg, num_groups, sigma, sigma_b, sigma_new, dims, mults)
+
+
+def init_dp_state(plan: DPPlan) -> DPState:
+    cfg = plan.config
+    k = max(plan.num_noise_groups, 1)
+    qstate = init_quantile_state(
+        np.full((k,), cfg.init_threshold, np.float32),
+        target_quantile=cfg.target_quantile,
+        lr=cfg.quantile_lr,
+        sigma_b=plan.sigma_b if cfg.adaptive else 0.0,
+    )
+    return DPState(qstate=qstate, step=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Noise application (spec-aware: stacked and blocked leaves).
+# ---------------------------------------------------------------------------
+
+
+def add_noise_to_grads(
+    spec: SpecTree,
+    layout: GroupLayout,
+    grads: Any,
+    stds: jax.Array,  # (num_layout_groups,) per-LAYOUT-group std
+    key: jax.Array,
+    dtype=jnp.float32,
+) -> Any:
+    """grads + N(0, std_k²) with the right std per (possibly stacked/blocked)
+    parameter leaf. `stds` is indexed by layout-group flat id."""
+
+    def walk(node, g, path):
+        if isinstance(node, P):
+            gname = layout._leaf_group[path]
+            grp = layout.group(gname)
+            piece = jax.lax.dynamic_slice_in_dim(stds, grp.offset, grp.count)
+            piece = piece.reshape(grp.stack_shape or ())
+            leaf_key = jax.random.fold_in(
+                key, hash("/".join(path)) & 0x7FFFFFFF)
+            z = jax.random.normal(leaf_key, g.shape, dtype)
+            if node.blocks > 1:
+                # std varies per column block of the last axis
+                m = node.blocks
+                rest = g.shape[node.stack:-1]
+                std_full = piece.reshape(
+                    grp.stack_shape[:-1] + (1,) * len(rest) + (m, 1))
+                zb = z.reshape(g.shape[:-1] + (m, g.shape[-1] // m))
+                zb = zb * std_full
+                z = zb.reshape(g.shape)
+            else:
+                std_full = piece.reshape(
+                    (grp.stack_shape or ()) + (1,) * (g.ndim - len(grp.stack_shape)))
+                z = z * std_full
+            return (g.astype(dtype) + z).astype(g.dtype)
+        return {k2: walk(node[k2], g[k2], path + (k2,)) for k2 in node}
+
+    return walk(spec, grads, ())
+
+
+def _layout_stds(plan: DPPlan, layout: GroupLayout,
+                 thresholds: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-layout-group noise stds + the per-noise-group thresholds used.
+
+    For flat modes the single noise group covers every layout group; for
+    per_group mode the supergroup std is broadcast to its members.
+    """
+    cfg = plan.config
+    dims = jnp.asarray(plan.group_dims, jnp.float32)
+    mults = jnp.asarray(plan.sens_mults, jnp.float32)
+    stds_group = noise_lib.group_noise_stds(
+        cfg.noise_strategy, thresholds * mults, dims, plan.sigma_new)  # (G,)
+    if cfg.mode in ("ghost_flat", "naive_flat"):
+        return jnp.broadcast_to(stds_group, (layout.num_groups,)), thresholds
+    if cfg.mode == "per_group":
+        assign = jnp.asarray(np.asarray(cfg.group_assignment), jnp.int32)
+        return stds_group[assign], thresholds
+    return stds_group, thresholds
+
+
+# ---------------------------------------------------------------------------
+# The train-step factory.
+# ---------------------------------------------------------------------------
+
+
+def make_dp_train_step(
+    loss_fn: LossFn,
+    spec: SpecTree,
+    layout: GroupLayout,
+    optimizer: Any,  # repro.optim optimizer (init/update)
+    cfg: DPConfig,
+    *,
+    batch_size: int,
+    trainable_key: str | None = None,
+) -> tuple[Callable, Callable, DPPlan]:
+    """Returns (init_fn, step_fn, plan).
+
+    init_fn(params) -> (opt_state, dp_state)
+    step_fn(params, opt_state, dp_state, batch, key)
+        -> (params, opt_state, dp_state, StepMetrics)
+    """
+    plan = build_plan(cfg, layout)
+    assign = (jnp.asarray(np.asarray(cfg.group_assignment), jnp.int32)
+              if cfg.group_assignment is not None else None)
+
+    def init_fn(params):
+        tp = params if trainable_key is None else params[trainable_key]
+        return optimizer.init(tp), init_dp_state(plan)
+
+    nmb = cfg.microbatches
+    mb_size = batch_size // nmb
+    if batch_size % nmb:
+        raise ValueError("batch_size must divide by microbatches")
+
+    def _clip(params, batch, thresholds):
+        """Clipped sums + norms, accumulated over microbatches (exact)."""
+        def one(batch_mb):
+            if cfg.mode == "non_private":
+                return dp_clipped_gradients(
+                    loss_fn, params, batch_mb, layout, mode="non_private",
+                    batch_size=mb_size, trainable_key=trainable_key)
+            if cfg.mode == "per_layer":
+                return dp_clipped_gradients(
+                    loss_fn, params, batch_mb, layout, mode="per_layer",
+                    batch_size=mb_size, thresholds=thresholds,
+                    trainable_key=trainable_key)
+            if cfg.mode in ("ghost_flat", "naive_flat"):
+                return dp_clipped_gradients(
+                    loss_fn, params, batch_mb, layout, mode=cfg.mode,
+                    batch_size=mb_size, flat_threshold=thresholds[0],
+                    trainable_key=trainable_key)
+            return dp_clipped_gradients(
+                loss_fn, params, batch_mb, layout, mode="per_group",
+                batch_size=mb_size, group_assignment=assign,
+                group_thresholds=thresholds, trainable_key=trainable_key)
+
+        if nmb == 1:
+            return one(batch)
+
+        def _split_leaf(x):
+            y = x.reshape((nmb, mb_size) + x.shape[1:])
+            if cfg.batch_axes is not None:
+                from jax.sharding import PartitionSpec as _PS
+                y = jax.lax.with_sharding_constraint(
+                    y, _PS(None, cfg.batch_axes))
+            return y
+
+        split = jax.tree_util.tree_map(_split_leaf, batch)
+
+        def body(acc, batch_mb):
+            res = one(batch_mb)
+            g_acc, loss_acc = acc
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, res.grads)
+            return (g_acc, loss_acc + res.loss), res.norms_sq
+
+        tp = params if trainable_key is None else {
+            trainable_key: params[trainable_key]}
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tp)
+        (g_sum, loss_sum), norms = jax.lax.scan(body, (g0, 0.0), split)
+        norms = jnp.moveaxis(norms, 0, 1).reshape(layout.num_groups,
+                                                  batch_size)
+        from repro.core.clipping import ClipResult
+        g_sum = jax.tree_util.tree_map(
+            lambda a, x: a.astype(x.dtype), g_sum, tp)
+        return ClipResult(g_sum, norms, loss_sum / nmb)
+
+    def step_fn(params, opt_state, dp_state, batch, key):
+        k_noise, k_q = jax.random.split(jax.random.fold_in(key, dp_state.step))
+        thresholds = dp_state.qstate.thresholds  # (G,)
+        if (cfg.threshold_rescale is not None
+                and plan.num_noise_groups > 1):
+            thresholds = (cfg.threshold_rescale * thresholds
+                          / jnp.sqrt(jnp.sum(thresholds**2) + 1e-20))
+
+        res = _clip(params, batch, thresholds)
+        if cfg.mode == "non_private":
+            noised = res.grads
+            counts = jnp.zeros_like(thresholds)
+        else:
+            if cfg.mode == "per_layer":
+                counts = clip_counts(res.norms_sq, thresholds)
+            elif cfg.mode in ("ghost_flat", "naive_flat"):
+                counts = clip_counts(jnp.sum(res.norms_sq, axis=0)[None],
+                                     thresholds)
+            else:  # per_group
+                super_norms = jax.ops.segment_sum(
+                    res.norms_sq, assign, num_segments=plan.num_noise_groups)
+                counts = clip_counts(super_norms, thresholds)
+            stds, _ = _layout_stds(plan, layout, thresholds)
+            noised = add_noise_to_grads(spec, layout, res.grads, stds,
+                                        k_noise, cfg.noise_dtype)
+
+        tgrads = noised if trainable_key is None else noised[trainable_key]
+        tparams = params if trainable_key is None else params[trainable_key]
+        grad_avg = jax.tree_util.tree_map(
+            lambda g: (g / batch_size).astype(g.dtype), tgrads)
+        updates, new_opt_state = optimizer.update(grad_avg, opt_state, tparams)
+        new_tparams = jax.tree_util.tree_map(lambda p, u: p + u, tparams,
+                                             updates)
+        new_params = (new_tparams if trainable_key is None
+                      else {**params, trainable_key: new_tparams})
+
+        qstate = dp_state.qstate
+        if cfg.private and cfg.adaptive:
+            qstate = update_thresholds(qstate, counts, batch_size, k_q)
+        new_dp_state = DPState(qstate=qstate, step=dp_state.step + 1)
+
+        gn = jnp.sqrt(sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)))
+            for l in jax.tree_util.tree_leaves(grad_avg)))
+        metrics = StepMetrics(
+            loss=res.loss,
+            clip_fraction=1.0 - jnp.mean(counts) / batch_size,
+            mean_threshold=jnp.mean(thresholds),
+            grad_norm=gn,
+        )
+        return new_params, new_opt_state, new_dp_state, metrics
+
+    return init_fn, step_fn, plan

@@ -1,0 +1,81 @@
+"""LoRA adapters with DP clipping — the paper's GPT-3-scale recipe (Sec 5.3).
+
+The paper fine-tunes the 175B GPT-3 with DP LoRA under per-device clipping:
+base weights frozen (no per-example machinery needed for them), adapters
+A (d_in x r) and B (r x d_out) trained privately. Here:
+
+  * `lora_spec` builds the adapter P-spec (each adapter pair is ONE clipping
+    group — the adapter is "the layer" in group-wise terms; for per-shard
+    clipping the B matrix may be blocked).
+  * `dp_lora_linear` applies y = x W_frozen + (x A) B * (alpha/r) with the
+    fused clip-in-backprop on the adapter pair: ghost norms for both A and B
+    from one residual set.
+
+Per-example grad norms for LoRA factorize nicely:
+    dB_i = (X_i A)^T G_i           (r x d_out)   — ghost via small r
+    dA_i = X_i^T (G_i B^T)         (d_in x r)
+Both are computed with the standard linear ghost identity using the low-rank
+intermediate, so costs stay O(T² r) / O(T r (d_in + d_out)).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ghost
+from repro.core.dp_layers import clip_factor
+from repro.core.spec import P
+
+
+def lora_spec(d_in: int, d_out: int, rank: int, *, stack: tuple[int, ...] = (),
+              dtype=jnp.float32) -> dict:
+    """Adapter spec; {a, b} share one clipping group (their parent path)."""
+    s = len(stack)
+    return {
+        "a": P(stack + (d_in, rank), init="normal", scale=0.02, dtype=dtype,
+               stack=s),
+        "b": P(stack + (rank, d_out), init="zeros", dtype=dtype, stack=s),
+    }
+
+
+@jax.custom_vjp
+def dp_lora_linear(a, b, w_frozen, x, c, alpha):
+    """y = x @ w_frozen + (x @ a) @ b * (alpha / r); {a,b} one clip group."""
+    r = a.shape[-1]
+    scale = alpha / r
+    return x @ w_frozen + (x @ a) @ b * scale
+
+
+def _fwd(a, b, w_frozen, x, c, alpha):
+    return dp_lora_linear(a, b, w_frozen, x, c, alpha), (a, b, w_frozen, x, c, alpha)
+
+
+def _bwd(res, gy):
+    a, b, w_frozen, x, c, alpha = res
+    r = a.shape[-1]
+    scale = alpha / r
+    bsz = x.shape[0]
+    x3 = x.reshape(bsz, -1, x.shape[-1])
+    g3 = gy.reshape(bsz, -1, gy.shape[-1])
+    # input cotangent (unclipped, through both paths)
+    dx = gy @ w_frozen.T + ((gy * scale) @ b.T) @ a.T
+    # per-example norms of the adapter pair's gradients
+    xa = x3 @ a  # (B, T, r)
+    gbt = (g3 * scale) @ b.T  # (B, T, r)
+    n_b = ghost.linear_norms_sq(xa, g3 * scale)  # ||dB_i||²
+    n_a = ghost.linear_norms_sq(x3, gbt)  # ||dA_i||²
+    n = n_a + n_b
+    f = clip_factor(c, n)
+    da = ghost.clipped_sum_linear(x3, gbt, f).astype(a.dtype)
+    db = ghost.clipped_sum_linear(xa, g3 * scale, f).astype(b.dtype)
+    dw = jnp.zeros_like(w_frozen)  # frozen
+    return da, db, dw, dx, n, jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
+
+
+dp_lora_linear.defvjp(_fwd, _bwd)
+
+
+def merge_lora(w, a, b, alpha: float):
+    """Fold a trained adapter into the frozen weight (serving path)."""
+    r = a.shape[-1]
+    return w + (a @ b) * (alpha / r)

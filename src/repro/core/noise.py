@@ -1,0 +1,119 @@
+"""Noise allocation for group-wise clipping (paper Sec. 3.3 "Allocating Noise").
+
+The Gaussian mechanism is applied to the *scaled* concatenation
+g_hat = (g~_1/gamma_1, ..., g~_K/gamma_K), whose L2 sensitivity is
+
+    S = sqrt( sum_k C_k^2 / gamma_k^2 ).
+
+Unscaling afterwards means group k receives noise with per-coordinate std
+
+    std_k = sigma_new * S * gamma_k      (Algorithm 1, line 13).
+
+Strategies for the scaling coefficients gamma_k:
+  * global       : gamma_k = 1          -> every coordinate gets equal noise;
+                                           V_G ∝ (Σ C_k²)(Σ d_k)
+  * equal_budget : gamma_k = C_k        -> S = sqrt(K); each group's noise
+                                           depends only on its own threshold
+                                           (the per-device scheme: no
+                                           cross-device communication);
+                                           V_E ∝ K Σ d_k C_k²
+  * weighted     : gamma_k = C_k/sqrt(d_k) -> roughly equal per-coordinate SNR
+                                           (Appendix E); V ∝ (Σ d_k)(Σ C_k²)
+
+Noise keys are folded per leaf path so draws are deterministic, order-
+independent, and shard-friendly (each shard draws its own slice because
+jax.random is counter-based and partitionable under jit).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Strategy = str  # 'global' | 'equal_budget' | 'weighted'
+_STRATEGIES = ("global", "equal_budget", "weighted")
+
+
+def gammas(strategy: Strategy, thresholds: jax.Array, dims: jax.Array) -> jax.Array:
+    """Scaling coefficients gamma_k, shape (K,)."""
+    if strategy == "global":
+        return jnp.ones_like(thresholds)
+    if strategy == "equal_budget":
+        return thresholds
+    if strategy == "weighted":
+        return thresholds / jnp.sqrt(jnp.asarray(dims, jnp.float32))
+    raise ValueError(f"unknown noise allocation strategy {strategy!r}; "
+                     f"expected one of {_STRATEGIES}")
+
+
+def sensitivity(thresholds: jax.Array, g: jax.Array) -> jax.Array:
+    """S = sqrt(sum_k C_k^2 / gamma_k^2)."""
+    return jnp.sqrt(jnp.sum((thresholds / g) ** 2))
+
+
+def group_noise_stds(
+    strategy: Strategy,
+    thresholds: jax.Array,
+    dims: jax.Array,
+    sigma_new: jax.Array | float,
+) -> jax.Array:
+    """Per-group per-coordinate noise std, shape (K,): sigma_new * S * gamma_k."""
+    g = gammas(strategy, thresholds, dims)
+    s = sensitivity(thresholds, g)
+    return jnp.asarray(sigma_new, jnp.float32) * s * g
+
+
+def total_noise_sq_norm(
+    strategy: Strategy,
+    thresholds: jax.Array,
+    dims: jax.Array,
+    sigma_new: float = 1.0,
+) -> jax.Array:
+    """E ||z||^2 = sum_k d_k std_k^2 — used by tests against the paper's V_G/V_E."""
+    stds = group_noise_stds(strategy, thresholds, dims, sigma_new)
+    return jnp.sum(jnp.asarray(dims, jnp.float32) * stds**2)
+
+
+def _leaf_key(base_key: jax.Array, path: tuple) -> jax.Array:
+    """Deterministic per-leaf key: fold the leaf path hash into the base key."""
+    h = 0
+    for entry in path:
+        name = getattr(entry, "key", None)
+        if name is None:
+            name = getattr(entry, "idx", None)
+        if name is None:
+            name = getattr(entry, "name", str(entry))
+        h = (h * 1000003 + hash(str(name))) & 0x7FFFFFFF
+    return jax.random.fold_in(base_key, h)
+
+
+def add_gaussian_noise(
+    grads: Any,
+    group_of_leaf: Callable[[tuple], int] | Any,
+    stds: jax.Array,
+    key: jax.Array,
+) -> Any:
+    """Add per-group Gaussian noise to a pytree of summed clipped gradients.
+
+    grads:          pytree of arrays (already clipped & summed over batch).
+    group_of_leaf:  either a callable (path -> group index) or a pytree with
+                    the same structure as grads whose leaves are int group ids.
+    stds:           (K,) per-group noise std (see group_noise_stds).
+    key:            PRNG key; per-leaf keys are derived by path folding.
+    """
+    paths_leaves = jax.tree_util.tree_flatten_with_path(grads)[0]
+    treedef = jax.tree_util.tree_structure(grads)
+    if callable(group_of_leaf):
+        gids = [group_of_leaf(p) for p, _ in paths_leaves]
+    else:
+        gids = jax.tree_util.tree_leaves(group_of_leaf)
+        if len(gids) != len(paths_leaves):
+            raise ValueError("group pytree structure mismatch")
+    noised = []
+    for (path, leaf), gid in zip(paths_leaves, gids):
+        k = _leaf_key(key, path)
+        std = stds[gid]
+        z = std * jax.random.normal(k, leaf.shape, dtype=jnp.float32)
+        noised.append((leaf.astype(jnp.float32) + z).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, noised)

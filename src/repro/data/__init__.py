@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    ByteCorpus, PoissonSampler, SyntheticLM, SyntheticClassification,
+    make_lm_batch, pack_documents,
+)
+
+__all__ = [
+    "ByteCorpus", "PoissonSampler", "SyntheticLM", "SyntheticClassification",
+    "make_lm_batch", "pack_documents",
+]

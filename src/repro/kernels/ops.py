@@ -1,0 +1,29 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On TPU, `use_kernels(True)` routes `repro.core.ghost`'s hot paths through
+pallas_call; on CPU (this container) the kernels run in interpret mode for
+correctness validation and the XLA reference paths stay the production
+default. Dry-run lowering always uses the XLA paths (a TPU custom-call
+cannot lower on the CPU backend)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.clip_reduce import clip_reduce
+from repro.kernels.ghost_norm import ghost_norm
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("bt", "dk"))
+def ghost_norm_op(a, g, *, bt: int = 256, dk: int = 512):
+    return ghost_norm(a, g, bt=bt, dk=dk, interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("bi", "bj", "bt"))
+def clip_reduce_op(a, g, factors, *, bi: int = 256, bj: int = 256,
+                   bt: int = 256):
+    return clip_reduce(a, g, factors, bi=bi, bj=bj, bt=bt,
+                       interpret=_INTERPRET)

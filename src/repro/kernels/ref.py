@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ghost_norm_ref(a: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """(B,) squared Frobenius norms of per-example grads A_iᵀG_i.
+
+    a: (B, T, din); g: (B, T, dout). Direct gram-identity evaluation.
+    """
+    a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
+    gram_a = jnp.einsum("bti,bsi->bts", a32, a32)
+    gram_g = jnp.einsum("bto,bso->bts", g32, g32)
+    return jnp.sum(gram_a * gram_g, axis=(1, 2))
+
+
+def clip_reduce_ref(a: jnp.ndarray, g: jnp.ndarray,
+                    factors: jnp.ndarray) -> jnp.ndarray:
+    """sum_i c_i A_iᵀ G_i. a: (B, T, din); g: (B, T, dout); factors: (B,)."""
+    a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
+    return jnp.einsum("bti,bto->io", a32, g32 * factors[:, None, None])

@@ -1,0 +1,347 @@
+"""Trip-count-aware cost analysis over post-SPMD HLO text.
+
+XLA's built-in `compiled.cost_analysis()` visits every instruction ONCE, so
+`lax.scan`/`while` bodies (our layer stacks, microbatch loops, flash
+attention blocks) are undercounted by their trip counts — useless for a
+roofline. This module re-derives per-device totals from the optimized HLO
+text, multiplying loop bodies by their `known_trip_count` annotations:
+
+  flops        — dot ops: 2 * |result| * K (contraction size from the lhs
+                 symbol table); elementwise ops: |result|
+  bytes        — per instruction: result + operand bytes; fusions count only
+                 their boundary (internals never touch HBM)
+  collectives  — per kind: count and result bytes, loop-multiplied
+
+Conditionals take the max-flops branch (one branch executes per visit).
+This intentionally mirrors HloCostAnalysis semantics where they are sound
+and fixes them where they are not (loops).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OPCODE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+
+
+def _parse_instr_line(line: str):
+    """'%name = SHAPE opcode(operands), attrs' -> (name, shape, op, rest).
+
+    Robust to tuple shapes with embedded '/*index=N*/' comments and layout
+    annotations (which defeat naive '[^=]*' shape groups)."""
+    ls = line.strip()
+    if not (ls.startswith("%") or ls.startswith("ROOT ")):
+        return None
+    if " = " not in ls:
+        return None
+    lhs, rhs = ls.split(" = ", 1)
+    name = lhs.replace("ROOT", "").strip().lstrip("%")
+    m = _OPCODE.search(rhs)
+    if not m:
+        return None
+    return name, rhs[: m.start()].strip(), m.group(1), rhs[m.end():]
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "collective-permute-start", "ragged-all-to-all",
+}
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "all-reduce-done", "all-gather-done", "collective-permute-done",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "cosine", "sine", "logistic", "expm1", "log1p", "erf",
+                   "atan2", "cbrt"}
+
+
+def _dims(shape_str: str) -> list[tuple[str, list[int]]]:
+    """All (dtype, dims) element shapes in a possibly-tuple shape string."""
+    return [(m.group(1), [int(d) for d in m.group(2).split(",") if d])
+            for m in _SHAPE_RE.finditer(shape_str)]
+
+
+def _nelems(dims: list[int]) -> int:
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _shape_bytes(shape_str: str) -> int:
+    return sum(_nelems(d) * _DTYPE_BYTES.get(dt, 4)
+               for dt, d in _dims(shape_str))
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Totals", mult: float = 1.0) -> None:
+        self.flops += mult * other.flops
+        self.bytes += mult * other.bytes
+        self.transcendentals += mult * other.transcendentals
+        for k, v in other.collectives.items():
+            slot = self.collectives.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += mult * v["count"]
+            slot["bytes"] += mult * v["bytes"]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # operand list + attributes (the remainder of the line)
+
+
+def parse_module(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and "->" in line and "{" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = []
+                comps[m.group(1)] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed:
+            cur.append(Instr(*parsed))
+    return comps
+
+
+_CALLED = re.compile(r"(?:calls|body|condition|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRUEFALSE = re.compile(r"(?:true|false)_computation=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^\d]*(\d+)')
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_LHS_CONTRACT = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DOT_BATCH = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+
+class HloAnalyzer:
+    def __init__(self, text: str):
+        self.comps = parse_module(text)
+        self.entry = self._find_entry(text)
+        self._memo: dict[str, Totals] = {}
+
+    @staticmethod
+    def _find_entry(text: str) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    return m.group(1)
+        raise ValueError("no ENTRY computation found")
+
+    def analyze(self) -> Totals:
+        return self._comp(self.entry)
+
+    def _comp(self, name: str) -> Totals:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Totals()  # cycle guard
+        instrs = self.comps.get(name, [])
+        shapes = {i.name: i.shape for i in instrs}
+        t = Totals()
+        for ins in instrs:
+            self._instr(ins, shapes, t)
+        self._memo[name] = t
+        return t
+
+    def _operand_shapes(self, ins: Instr, shapes: dict[str, str]
+                        ) -> list[str]:
+        # operands are the leading %refs before the closing paren of the
+        # operand list; attribute refs come after "), " — take refs up to
+        # the first ")" at depth 0
+        depth, end = 1, len(ins.rest)
+        for idx, ch in enumerate(ins.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = idx
+                    break
+        ops = _OPERANDS.findall(ins.rest[:end])
+        return [shapes.get(o, "") for o in ops]
+
+    def _instr(self, ins: Instr, shapes: dict[str, str], t: Totals) -> None:
+        op = ins.op
+        if op in _SKIP_OPS:
+            return
+        rbytes = _shape_bytes(ins.shape)
+        if op == "while":
+            body = cond = None
+            bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+            trip_m = _TRIP.search(ins.rest)
+            trip = int(trip_m.group(1)) if trip_m else 1
+            if bm:
+                t.add(self._comp(bm.group(1)), trip)
+            if cm:
+                t.add(self._comp(cm.group(1)), trip)
+            return
+        if op == "conditional":
+            branches = []
+            bm = _BRANCHES.search(ins.rest)
+            if bm:
+                branches = [b.strip().lstrip("%")
+                            for b in bm.group(1).split(",")]
+            else:
+                branches = _TRUEFALSE.findall(ins.rest)
+            if branches:
+                subs = [self._comp(b) for b in branches]
+                best = max(subs, key=lambda s: s.flops)
+                t.add(best)
+            return
+        if op in ("call", "async-start"):
+            cm = _CALLED.search(ins.rest)
+            if cm:
+                t.add(self._comp(cm.group(1)))
+            return
+        if op == "fusion":
+            cm = _CALLED.search(ins.rest)
+            if cm:
+                sub = self._comp(cm.group(1))
+                t.flops += sub.flops
+                t.transcendentals += sub.transcendentals
+                for k, v in sub.collectives.items():
+                    slot = t.collectives.setdefault(
+                        k, {"count": 0.0, "bytes": 0.0})
+                    slot["count"] += v["count"]
+                    slot["bytes"] += v["bytes"]
+            t.bytes += rbytes + sum(_shape_bytes(s)
+                                    for s in self._operand_shapes(ins, shapes))
+            return
+        if op in COLLECTIVE_OPS:
+            base = op.replace("-start", "")
+            slot = t.collectives.setdefault(base, {"count": 0.0, "bytes": 0.0})
+            slot["count"] += 1
+            slot["bytes"] += rbytes
+            t.bytes += rbytes
+            return
+        opnd_bytes = sum(_shape_bytes(s)
+                         for s in self._operand_shapes(ins, shapes))
+        t.bytes += rbytes + opnd_bytes
+        if op in ("dot", "dot-general"):
+            opshapes = self._operand_shapes(ins, shapes)
+            k = 1
+            if opshapes and opshapes[0]:
+                lhs_dims = _dims(opshapes[0])[0][1]
+                cm = _LHS_CONTRACT.search(ins.rest)
+                if cm and cm.group(1):
+                    for ci in cm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+            nres = sum(_nelems(d) for _, d in _dims(ins.shape))
+            t.flops += 2.0 * nres * k
+            return
+        if op == "convolution":
+            # not used by our models; approximate as elementwise
+            t.flops += sum(_nelems(d) for _, d in _dims(ins.shape))
+            return
+        if op == "custom-call":
+            cm = _CALLED.search(ins.rest)
+            if cm and cm.group(1) in self.comps:
+                t.add(self._comp(cm.group(1)))
+            return
+        # elementwise / reduce / everything else: 1 flop per output element
+        nres = sum(_nelems(d) for _, d in _dims(ins.shape))
+        t.flops += nres
+        if op in _TRANSCENDENTAL:
+            t.transcendentals += nres
+
+
+def analyze_hlo(text: str) -> Totals:
+    return HloAnalyzer(text).analyze()
+
+
+# ---------------------------------------------------------------------------
+# Collective attribution: which program sites emit the bytes.
+# ---------------------------------------------------------------------------
+
+_OPNAME = re.compile(r'op_name="([^"]*)"')
+
+
+def collective_breakdown(text: str, top: int = 15) -> list[dict]:
+    """Attribute collective result-bytes to source op_name sites.
+
+    Loop multipliers are applied by locating each collective's enclosing
+    computations through the analyzer's call graph (a site inside the
+    36-layer scan counts 36x). Returns the top sites by total bytes.
+    """
+    an = HloAnalyzer(text)
+    # compute the visit multiplicity of every computation from the entry
+    mult: dict[str, float] = {}
+
+    def visit(comp: str, m: float):
+        mult[comp] = mult.get(comp, 0.0) + m
+        for ins in an.comps.get(comp, []):
+            if ins.op == "while":
+                t = _TRIP.search(ins.rest)
+                trip = int(t.group(1)) if t else 1
+                bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w.\-]+)", ins.rest)
+                if bm:
+                    visit(bm.group(1), m * trip)
+                if cm:
+                    visit(cm.group(1), m * trip)
+            elif ins.op == "conditional":
+                bs = _BRANCHES.search(ins.rest)
+                names = ([b.strip().lstrip("%") for b in
+                          bs.group(1).split(",")] if bs
+                         else _TRUEFALSE.findall(ins.rest))
+                for n in names:
+                    visit(n, m)
+            elif ins.op in ("fusion", "call", "custom-call", "async-start"):
+                cm2 = _CALLED.search(ins.rest)
+                if cm2 and cm2.group(1) in an.comps:
+                    visit(cm2.group(1), m)
+
+    visit(an.entry, 1.0)
+    sites: dict[tuple[str, str], dict] = {}
+    for comp, instrs in an.comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0:
+            continue
+        for ins in instrs:
+            base = ins.op.replace("-start", "")
+            if base not in {"all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute"}:
+                continue
+            if ins.op.endswith("-done"):
+                continue
+            nm = _OPNAME.search(ins.rest)
+            site = nm.group(1) if nm else "<unattributed>"
+            # trim jit prefixes for readability
+            site = site.split("jit(step_fn)/")[-1][:120]
+            key = (base, site)
+            slot = sites.setdefault(key, {"bytes": 0.0, "count": 0.0})
+            slot["bytes"] += m * _shape_bytes(ins.shape)
+            slot["count"] += m
+    rows = [{"kind": k[0], "site": k[1], **v} for k, v in sites.items()]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:top]

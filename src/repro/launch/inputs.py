@@ -1,0 +1,56 @@
+"""Abstract input builders: ShapeDtypeStruct stand-ins for every workload.
+
+This is the ONLY place the frontend stubs live (task-spec carve-out):
+audio archs receive precomputed frame embeddings, VLMs receive precomputed
+patch embeddings — weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+
+VLM_PATCHES = 256  # stub vision-token count prepended to the text sequence
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    b, t = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": sds((b, t), jnp.int32),
+        "targets": sds((b, t), jnp.int32),
+    }
+    if cfg.arch_type == "audio":
+        batch["frames"] = sds((b, cfg.encoder_seq_len, cfg.d_model),
+                              cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["vision_embeds"] = sds((b, VLM_PATCHES, cfg.d_model), cfg.dtype)
+        batch["positions3_full"] = sds((b, 3, t + VLM_PATCHES), jnp.int32)
+    return batch
+
+
+def serve_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    return {"token": sds((shape.global_batch, 1), jnp.int32)}
+
+
+def concrete_train_batch(cfg: ModelConfig, b: int, t: int, key) -> dict:
+    """Small concrete batch for smoke tests / examples."""
+    toks = jax.random.randint(key, (b, t), 0, cfg.vocab_size)
+    tgt = jnp.roll(toks, -1, axis=1).at[:, -1].set(-1)
+    batch = {"tokens": toks, "targets": tgt}
+    if cfg.arch_type == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            key, (b, cfg.encoder_seq_len, cfg.d_model), dtype=jnp.float32
+        ).astype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        tv = 8
+        batch["vision_embeds"] = 0.1 * jax.random.normal(
+            key, (b, tv, cfg.d_model), dtype=jnp.float32).astype(cfg.dtype)
+        pos = jnp.broadcast_to(jnp.arange(t + tv, dtype=jnp.int32)[None],
+                               (b, t + tv))
+        batch["positions3_full"] = jnp.broadcast_to(
+            pos[:, None, :], (b, 3, t + tv))
+    return batch

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Single pod:  (data=16, model=16)            = 256 chips (TPU v5e pod)
+Multi-pod:   (pod=2, data=16, model=16)     = 512 chips
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Mesh axes forming the data-parallel plane."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str:
+    return "model"
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
+    """Small mesh for tests (requires xla_force_host_platform_device_count)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

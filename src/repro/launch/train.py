@@ -1,0 +1,134 @@
+"""End-to-end training driver (runs for real on CPU at reduced scale; the
+same code path jits under the production mesh on TPU).
+
+Example:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \\
+      --clipping per_layer --epsilon 8 --steps 50 --batch 16 --seq 64
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCH_IDS, get_config
+from repro.core.accounting import compute_epsilon
+from repro.core.dp_sgd import DPConfig, make_dp_train_step
+from repro.core.spec import init_params
+from repro.data import PoissonSampler, SyntheticLM, make_lm_batch, pack_documents
+from repro.models.transformer import build_model
+
+
+def build_everything(args):
+    cfg = get_config(args.arch, reduced=args.reduced, variant=args.variant)
+    if args.lora_rank:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, lora_rank=args.lora_rank)
+    model = build_model(cfg)
+
+    src = SyntheticLM(vocab_size=cfg.vocab_size, num_docs=args.docs,
+                      doc_len=args.seq * 2, seed=0)
+    rows = pack_documents(src.documents(), args.seq)
+    sampler = PoissonSampler(num_examples=rows.shape[0],
+                             rate=args.batch / rows.shape[0],
+                             max_batch=args.batch, seed=1)
+
+    dpc = DPConfig(
+        mode=args.clipping,
+        epsilon=args.epsilon if args.sigma is None else None,
+        sigma=args.sigma, delta=args.delta,
+        sampling_rate=args.batch / rows.shape[0], steps=args.steps,
+        adaptive=not args.fixed_thresholds,
+        init_threshold=args.init_threshold,
+        target_quantile=args.quantile,
+        quantile_budget_fraction=args.quantile_budget,
+        noise_strategy=args.noise_strategy,
+        microbatches=args.microbatches,
+    )
+    sched = optim.linear_decay(args.lr, args.steps, warmup_steps=args.steps // 20)
+    if args.optimizer == "adam":
+        opt = optim.adam(sched)
+    elif args.optimizer == "adamw":
+        opt = optim.adamw(sched)
+    else:
+        opt = optim.sgd(sched, momentum=0.9)
+    init_fn, step_fn, plan = make_dp_train_step(
+        model.loss_fn, getattr(model, "dp_spec", model.spec), model.layout,
+        opt, dpc, batch_size=args.batch,
+        trainable_key=getattr(model, "trainable_key", None))
+    return cfg, model, rows, sampler, init_fn, step_fn, plan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny",
+                    choices=ARCH_IDS + ["tiny"])
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--clipping", default="per_layer")
+    ap.add_argument("--epsilon", type=float, default=8.0)
+    ap.add_argument("--delta", type=float, default=1e-5)
+    ap.add_argument("--sigma", type=float, default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--docs", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adam")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--fixed-thresholds", action="store_true")
+    ap.add_argument("--init-threshold", type=float, default=1.0)
+    ap.add_argument("--quantile", type=float, default=0.5)
+    ap.add_argument("--quantile-budget", type=float, default=0.01)
+    ap.add_argument("--noise-strategy", default="global")
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg, model, rows, sampler, init_fn, step_fn, plan = build_everything(args)
+    params = init_params(model.spec, jax.random.PRNGKey(args.seed))
+    opt_state, dp_state = init_fn(params)
+    step = jax.jit(step_fn)
+    key = jax.random.PRNGKey(args.seed + 1)
+
+    print(f"# arch={cfg.name} params={model.num_params:,} "
+          f"groups={model.layout.num_groups} mode={plan.config.mode} "
+          f"sigma={plan.sigma:.3f} sigma_new={plan.sigma_new:.3f} "
+          f"sigma_b={plan.sigma_b:.3f}")
+    t_start = time.time()
+    for i in range(args.steps):
+        idx = sampler.next_indices()
+        batch = make_lm_batch(rows, idx, args.batch)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, dp_state, met = step(
+            params, opt_state, dp_state, batch, key)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(met.loss):.4f} "
+                  f"clip_frac {float(met.clip_fraction):.3f} "
+                  f"thr {float(met.mean_threshold):.4f} "
+                  f"gnorm {float(met.grad_norm):.4f}", flush=True)
+    wall = time.time() - t_start
+    if plan.config.private:
+        eps = compute_epsilon(sigma=plan.sigma,
+                              sampling_rate=plan.config.sampling_rate,
+                              steps=args.steps, delta=args.delta)
+        print(f"# spent epsilon={eps:.3f} (delta={args.delta}) "
+              f"in {args.steps} steps, {wall:.1f}s "
+              f"({wall/args.steps*1e3:.1f} ms/step)")
+    if args.checkpoint_dir:
+        path = save_checkpoint(args.checkpoint_dir, args.steps,
+                               {"params": params, "dp_state": dp_state})
+        print(f"# checkpoint: {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,375 @@
+"""Attention: GQA (qk-norm / QKV-bias / sliding-window) and MLA.
+
+Training/prefill use a flash-style double-blocked online-softmax attention
+(pure XLA: scan over query blocks, inner scan over KV blocks) so no (T, S)
+score matrix is ever materialized — the same blocking a TPU flash kernel
+would use in VMEM, expressed at the XLA level so it lowers on any backend.
+
+Decode paths:
+  * GQA: ring-buffer-capable KV cache, one-token query against S cached
+    entries (keys stored post-RoPE).
+  * MLA (DeepSeek-V3): the compressed-latent cache (kv_lora_rank + rope dim
+    per token instead of 2·H·hd) with the ABSORBED decode form — W_UK folded
+    into the query and W_UV applied after attending over latents — so decode
+    FLOPs/bytes scale with kv_lora_rank, not with H·hd. This is the paper's
+    per-device-clipping showcase arch; the absorption is a beyond-paper perf
+    optimization recorded in EXPERIMENTS.md.
+
+All projections are DP primitives (clip-in-backprop).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_layers as dpl
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.core.spec import P
+
+_SINGLE_SHOT_MAX = 2048 * 2048  # T*S above this -> blocked attention
+_QB, _KB = 512, 1024  # query/kv block sizes for the blocked path
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (no params).
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q, k):
+    """q: (B, T, KV, G, hd), k: (B, S, KV, hd) -> (B, T, KV, G, S)."""
+    return jnp.einsum("btkgd,bskd->btkgs", q.astype(jnp.float32),
+                      k.astype(jnp.float32))
+
+
+INVALID_POS = jnp.iinfo(jnp.int32).max - 8  # kpos >= this => masked out
+
+
+def _mask(qpos, kpos, *, causal, window):
+    """(B, T, S) boolean validity mask."""
+    m = (kpos[:, None, :] < INVALID_POS) & jnp.ones(
+        (qpos.shape[0], qpos.shape[1], kpos.shape[1]), bool)
+    if causal:
+        m = m & (kpos[:, None, :] <= qpos[:, :, None])
+    if window is not None:
+        m = m & (kpos[:, None, :] > qpos[:, :, None] - window)
+    return m
+
+
+def attend(q, k, v, qpos, kpos, *, causal=True, window=None, scale=None):
+    """Grouped-query attention. q: (B, T, H, hd); k, v: (B, S, KV, hd).
+
+    Chooses single-shot vs double-blocked online softmax by T*S.
+    """
+    b, t, h, hd = q.shape
+    s, kv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, t, kv, g, hd) * scale
+
+    if t * s <= _SINGLE_SHOT_MAX:
+        scores = _gqa_scores(qg, k)  # (B, T, KV, G, S)
+        m = _mask(qpos, kpos, causal=causal, window=window)
+        scores = jnp.where(m[:, :, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("btkgs,bskd->btkgd", w, v.astype(jnp.float32))
+        return out.reshape(b, t, h, dv).astype(q.dtype)
+
+    # ---- double-blocked online softmax ----
+    qb = min(_QB, t)
+    kb = min(_KB, s)
+    nqb, nkb = -(-t // qb), -(-s // kb)
+    tp, sp = nqb * qb, nkb * kb
+    qg_p = jnp.pad(qg, ((0, 0), (0, tp - t), (0, 0), (0, 0), (0, 0)))
+    qpos_p = jnp.pad(qpos, ((0, 0), (0, tp - t)), constant_values=-1)
+    k_p = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    v_p = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(kpos, ((0, 0), (0, sp - s)),
+                     constant_values=jnp.iinfo(jnp.int32).max)
+
+    k_blocks = jnp.moveaxis(k_p.reshape(b, nkb, kb, kv, hd), 1, 0)
+    v_blocks = jnp.moveaxis(v_p.reshape(b, nkb, kb, kv, dv), 1, 0)
+    kpos_blocks = jnp.moveaxis(kpos_p.reshape(b, nkb, kb), 1, 0)
+
+    def q_block(carry, qblk):
+        qi, qpos_i = qblk  # (B, qb, KV, G, hd), (B, qb)
+
+        def kv_block(state, kblk):
+            m_run, l_run, acc = state
+            ki, vi, kpos_i = kblk
+            sc = _gqa_scores(qi, ki)  # (B, qb, KV, G, kb)
+            msk = _mask(qpos_i, kpos_i, causal=causal, window=window)
+            sc = jnp.where(msk[:, :, None, None, :], sc, NEG_INF)
+            m_new = jnp.maximum(m_run, jnp.max(sc, axis=-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l_run * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "btkgs,bskd->btkgd", p, vi.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, qb, kv, g), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qb, kv, g), jnp.float32)
+        a0 = jnp.zeros((b, qb, kv, g, dv), jnp.float32)
+        (mf, lf, accf), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (k_blocks, v_blocks, kpos_blocks))
+        out = accf / jnp.maximum(lf[..., None], 1e-30)
+        return carry, out
+
+    q_blocks = jnp.moveaxis(qg_p.reshape(b, nqb, qb, kv, g, hd), 1, 0)
+    qpos_blocks = jnp.moveaxis(qpos_p.reshape(b, nqb, qb), 1, 0)
+    _, outs = jax.lax.scan(q_block, 0, (q_blocks, qpos_blocks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tp, kv, g, dv)[:, :t]
+    return out.reshape(b, t, h, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block (params + DP).
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ModelConfig, *, stack: tuple[int, ...] = (),
+             cross: bool = False, sensitivity_mult: float = 1.0) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    sm = sensitivity_mult
+    out = {
+        "qkv": L.linear_spec(d, (h + 2 * kv) * hd, bias=cfg.qkv_bias,
+                             stack=stack, dtype=cfg.dtype,
+                             blocks=cfg.dp_blocks, sensitivity_mult=sm),
+        "o": L.linear_spec(h * hd, d, stack=stack, dtype=cfg.dtype,
+                           blocks=cfg.dp_blocks, sensitivity_mult=sm),
+    }
+    if cross:
+        # q from decoder, kv from encoder: separate projections
+        out["qkv"] = L.linear_spec(d, h * hd, bias=cfg.qkv_bias, stack=stack,
+                                   dtype=cfg.dtype, sensitivity_mult=sm)
+        out["kv"] = L.linear_spec(d, 2 * kv * hd, bias=cfg.qkv_bias,
+                                  stack=stack, dtype=cfg.dtype,
+                                  sensitivity_mult=sm)
+    if cfg.qk_norm:
+        out["q_norm"] = L.rmsnorm_spec(hd, stack=stack, dtype=cfg.dtype)
+        out["k_norm"] = L.rmsnorm_spec(hd, stack=stack, dtype=cfg.dtype)
+    return out
+
+
+def _split_qkv(cfg, qkv):
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = qkv[..., : h * hd]
+    k = qkv[..., h * hd: (h + kvh) * hd]
+    v = qkv[..., (h + kvh) * hd:]
+    b, t = qkv.shape[0], qkv.shape[1]
+    return (q.reshape(b, t, h, hd), k.reshape(b, t, kvh, hd),
+            v.reshape(b, t, kvh, hd))
+
+
+def _qk_norm(cfg, params, th, q, k):
+    if not cfg.qk_norm:
+        return q, k
+    b, t = q.shape[0], q.shape[1]
+    hd = cfg.resolved_head_dim
+
+    def apply(p, x, thx):
+        mu = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+        xh = (x.astype(jnp.float32) * jax.lax.rsqrt(mu + cfg.norm_eps)).astype(x.dtype)
+        flat = xh.reshape(b, -1, hd)
+        return dpl.dp_scale(p["s"], flat, thx).reshape(x.shape)
+
+    return (apply(params["q_norm"], q, th["q_norm"]),
+            apply(params["k_norm"], k, th["k_norm"]))
+
+
+def _proj(cfg, params, x, th, *, lora=None, lora_th=None, alpha=16.0):
+    """Projection with optional frozen-base + DP-LoRA adapter."""
+    if lora is not None:
+        from repro.core import lora as lora_mod
+        y = lora_mod.dp_lora_linear(lora["a"], lora["b"], params["w"], x,
+                                    lora_th, alpha)
+        if "b" in params:
+            y = y + params["b"]
+        return y
+    if cfg.dp_blocks > 1:
+        return L.linear_blocked(params, x, th)
+    return L.linear(params, x, th)
+
+
+def gqa_attention(cfg: ModelConfig, params, x, th, positions, *,
+                  causal=True, window=None, lora=None, lora_th=None):
+    """Self-attention, training/prefill. x: (B, T, D); positions: (B, T).
+
+    lora/lora_th: optional {'qkv': ..., 'o': ...} adapter params/thresholds —
+    the paper's DP-LoRA path (base projections frozen)."""
+    qkv = _proj(cfg, params["qkv"], x, th.get("qkv"),
+                lora=lora and lora.get("qkv"),
+                lora_th=lora_th and lora_th.get("qkv"), alpha=cfg.lora_alpha)
+    q, k, v = _split_qkv(cfg, qkv)
+    q, k = _qk_norm(cfg, params, th, q, k)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    out = attend(q, k, v, positions, positions, causal=causal, window=window)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return _proj(cfg, params["o"], out, th.get("o"),
+                 lora=lora and lora.get("o"),
+                 lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
+
+
+def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
+               window=None):
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, S, KV, hd); pos: (B,)
+    number of tokens already in the cache (new token index).
+
+    Sliding-window caches are ring buffers of capacity W; full caches have
+    capacity seq_len. Keys are stored post-RoPE."""
+    qkv = L.linear(params["qkv"], x, th["qkv"])
+    q, k, v = _split_qkv(cfg, qkv)
+    q, k = _qk_norm(cfg, params, th, q, k)
+    posb = pos[:, None]  # (B, 1)
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    cap = cache_k.shape[1]
+    slot = (pos % cap) if window is not None else pos
+
+    def write(cache, new):
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+        )(cache, new, slot)
+
+    cache_k = write(cache_k, k)
+    cache_v = write(cache_v, v)
+    # key positions: full cache -> arange; ring -> recovered from slot algebra
+    ar = jnp.arange(cap)[None, :]
+    if window is None:
+        kpos = jnp.where(ar <= pos[:, None], ar, jnp.iinfo(jnp.int32).max)
+    else:
+        # entry at slot s holds position: pos - ((slot - s) mod cap)
+        kpos = pos[:, None] - ((slot[:, None] - ar) % cap)
+        kpos = jnp.where(kpos >= 0, kpos, jnp.iinfo(jnp.int32).max - 1)
+    out = attend(q, cache_k, cache_v, posb, kpos, causal=True, window=window)
+    out = out.reshape(x.shape[0], 1, -1)
+    return L.linear(params["o"], out, th["o"]), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V3).
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ModelConfig, *, stack: tuple[int, ...] = ()) -> dict:
+    d, h = cfg.d_model, cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lr, qlr = cfg.kv_lora_rank, cfg.q_lora_rank
+    out = {
+        "kv_a": L.linear_spec(d, lr + rope, stack=stack, dtype=cfg.dtype),
+        "kv_norm": L.rmsnorm_spec(lr, stack=stack, dtype=cfg.dtype),
+        "kv_b": L.linear_spec(lr, h * (nope + vd), stack=stack, dtype=cfg.dtype),
+        "o": L.linear_spec(h * vd, d, stack=stack, dtype=cfg.dtype),
+    }
+    if qlr:
+        out["q_a"] = L.linear_spec(d, qlr, stack=stack, dtype=cfg.dtype)
+        out["q_norm"] = L.rmsnorm_spec(qlr, stack=stack, dtype=cfg.dtype)
+        out["q_b"] = L.linear_spec(qlr, h * (nope + rope), stack=stack,
+                                   dtype=cfg.dtype)
+    else:
+        out["q"] = L.linear_spec(d, h * (nope + rope), stack=stack,
+                                 dtype=cfg.dtype)
+    return out
+
+
+def _mla_q(cfg, params, x, th):
+    b, t = x.shape[0], x.shape[1]
+    h = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    if cfg.q_lora_rank:
+        qa = L.linear(params["q_a"], x, th["q_a"])
+        qa = L.rmsnorm(params["q_norm"], qa, th["q_norm"], eps=cfg.norm_eps)
+        q = L.linear(params["q_b"], qa, th["q_b"])
+    else:
+        q = L.linear(params["q"], x, th["q"])
+    q = q.reshape(b, t, h, nope + rope)
+    return q[..., :nope], q[..., nope:]
+
+
+def mla_attention(cfg: ModelConfig, params, x, th, positions, *, causal=True,
+                  lora=None, lora_th=None):
+    """Training/prefill MLA: materialize per-head K/V from the latent.
+
+    lora targets: 'kv_b' and 'o' (the per-head expansion and output)."""
+    b, t = x.shape[0], x.shape[1]
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(cfg, params, x, th)
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = L.linear(params["kv_a"], x, th["kv_a"])  # (B, T, lr + rope)
+    ckv = L.rmsnorm(params["kv_norm"], kv_a[..., :lr], th["kv_norm"],
+                    eps=cfg.norm_eps)
+    k_rope = kv_a[..., lr:].reshape(b, t, 1, rope)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+    kv = _proj(cfg, params["kv_b"], ckv, th.get("kv_b"),
+               lora=lora and lora.get("kv_b"),
+               lora_th=lora_th and lora_th.get("kv_b"),
+               alpha=cfg.lora_alpha).reshape(b, t, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, rope))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = 1.0 / math.sqrt(nope + rope)
+    out = attend(q, k, v, positions, positions, causal=causal, scale=scale)
+    out = out.reshape(b, t, h * vd)
+    return _proj(cfg, params["o"], out, th.get("o"),
+                 lora=lora and lora.get("o"),
+                 lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
+
+
+def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos):
+    """Absorbed-form MLA decode against the latent cache.
+
+    cache_ckv: (B, S, lr); cache_krope: (B, S, rope). One new token.
+    W_UK is folded into the query (q_lat = q_nope @ W_UK per head) and W_UV
+    applied after attending over latents, so per-step cost is O(S·lr), not
+    O(S·H·hd).
+    """
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(cfg, params, x, th)  # (B, 1, H, *)
+    posb = pos[:, None]
+    q_rope = L.apply_rope(q_rope, posb, cfg.rope_theta)
+
+    kv_a = L.linear(params["kv_a"], x, th["kv_a"])
+    ckv_new = L.rmsnorm(params["kv_norm"], kv_a[..., :lr], th["kv_norm"],
+                        eps=cfg.norm_eps)
+    krope_new = L.apply_rope(kv_a[..., lr:].reshape(b, 1, 1, rope), posb,
+                             cfg.rope_theta).reshape(b, 1, rope)
+
+    write = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+        c, n, i, axis=0))
+    cache_ckv = write(cache_ckv, ckv_new, pos)
+    cache_krope = write(cache_krope, krope_new, pos)
+
+    # absorb W_UK / W_UV (per-head slices of kv_b)
+    w_kv_b = params["kv_b"]["w"].reshape(lr, h, nope + vd)
+    w_uk = w_kv_b[..., :nope]  # (lr, H, nope)
+    w_uv = w_kv_b[..., nope:]  # (lr, H, vd)
+    q_lat = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # (B, 1, H, lr)
+    scores = (jnp.einsum("bohl,bsl->bhos", q_lat,
+                         cache_ckv.astype(jnp.float32))
+              + jnp.einsum("bohr,bsr->bhos", q_rope.astype(jnp.float32),
+                           cache_krope.astype(jnp.float32)))
+    scores = scores / math.sqrt(nope + rope)
+    s = cache_ckv.shape[1]
+    valid = jnp.arange(s)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)  # (B, H, 1, S)
+    lat = jnp.einsum("bhos,bsl->bohl", w, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bohl,lhv->bohv", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * vd).astype(x.dtype)
+    return L.linear(params["o"], out, th["o"]), cache_ckv, cache_krope

@@ -1,0 +1,147 @@
+"""Shared building blocks: norms, MLPs, rotary embeddings (incl. M-RoPE).
+
+Every parametric op routes through the DP primitives so clipping is fused
+into backprop; `th` is the encoded-threshold dict slice for this module
+(see core.dp_layers). During inference the thresholds are +inf and the
+custom VJPs are never exercised.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_layers as dpl
+from repro.core.spec import P
+
+
+# ---------------------------------------------------------------------------
+# Norms.
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_spec(d: int, *, stack: tuple[int, ...] = (), dtype=jnp.float32) -> dict:
+    return {"s": P(stack + (d,), init="ones", dtype=dtype, stack=len(stack))}
+
+
+def rmsnorm(params, x, th, *, eps: float = 1e-5):
+    mu = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    xhat = (x.astype(jnp.float32) * jax.lax.rsqrt(mu + eps)).astype(x.dtype)
+    return dpl.dp_scale(params["s"], xhat, th)
+
+
+def head_rmsnorm(scale, x, *, eps: float = 1e-5):
+    """Per-head q/k norm (Qwen3): non-DP param-free normalization + DP scale
+    is applied by the caller via dp_scale on the flattened head dim."""
+    mu = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    xhat = (x.astype(jnp.float32) * jax.lax.rsqrt(mu + eps)).astype(x.dtype)
+    return xhat * scale
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP.
+# ---------------------------------------------------------------------------
+
+
+def linear_spec(din: int, dout: int, *, bias: bool = False,
+                stack: tuple[int, ...] = (), dtype=jnp.float32,
+                blocks: int = 1, sensitivity_mult: float = 1.0) -> dict:
+    s = len(stack)
+    out = {"w": P(stack + (din, dout), dtype=dtype, stack=s, blocks=blocks,
+                  sensitivity_mult=sensitivity_mult)}
+    if bias:
+        # blocked layers split the bias into the same M column blocks so the
+        # {w, b} pair stays one group per block (dp_linear_blocked semantics)
+        out["b"] = P(stack + (dout,), init="zeros", dtype=dtype, stack=s,
+                     blocks=blocks, sensitivity_mult=sensitivity_mult)
+    return out
+
+
+def linear(params, x, th):
+    return dpl.dp_linear(params["w"], params.get("b"), x, th)
+
+
+def linear_blocked(params, x, th):
+    """th: (M, B) from the layout -> (B, M) for the primitive."""
+    return dpl.dp_linear_blocked(params["w"], params.get("b"), x, th.T, "out")
+
+
+def swiglu_spec(d: int, f: int, *, stack: tuple[int, ...] = (),
+                dtype=jnp.float32) -> dict:
+    return {
+        "gate_up": linear_spec(d, 2 * f, stack=stack, dtype=dtype),
+        "down": linear_spec(f, d, stack=stack, dtype=dtype),
+    }
+
+
+def swiglu(params, x, th_prefix, *, f: int):
+    gu = linear(params["gate_up"], x, th_prefix["gate_up"])
+    gate, up = gu[..., :f], gu[..., f:]
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    return linear(params["down"], h, th_prefix["down"])
+
+
+def gelu_mlp_spec(d: int, f: int, *, stack: tuple[int, ...] = (),
+                  bias: bool = True, dtype=jnp.float32) -> dict:
+    return {
+        "up": linear_spec(d, f, bias=bias, stack=stack, dtype=dtype),
+        "down": linear_spec(f, d, bias=bias, stack=stack, dtype=dtype),
+    }
+
+
+def gelu_mlp(params, x, th_prefix):
+    h = linear(params["up"], x, th_prefix["up"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return linear(params["down"], h, th_prefix["down"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings.
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def apply_m_rope(x: jax.Array, positions3: jax.Array, theta: float,
+                 sections: tuple[int, ...]) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions3 (3, B, T) = (t, h, w) streams;
+    the head_dim/2 frequency slots are split into `sections` per stream."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    assert sum(sections) == hd // 2, (sections, hd)
+    # section id per frequency slot
+    sec_ids = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    pos = positions3.astype(jnp.float32)  # (3, B, T)
+    pos_per_slot = pos[sec_ids]  # (hd/2, B, T) gathered per slot
+    ang = jnp.moveaxis(pos_per_slot, 0, -1) * freqs  # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x1 * sin + x2 * cos
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (B-agnostic table)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    out = jnp.zeros((seq_len, d), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block — Zamba2's backbone layer.
+
+Implements the chunked State-Space-Duality computation of Dao & Gu (2024):
+within a chunk the output is an attention-like masked product; across chunks
+a cheap recurrence carries the (H, P, N) state. Chunk size `ssm_chunk`
+bounds the (Q, Q) decay matrices the same way a TPU kernel would tile VMEM.
+
+DP mapping:
+  * in_proj / out_proj: dp_linear (ghost norms) — the dominant params;
+  * depthwise conv, dt_bias, A_log, D skip, gated-norm scale: small vector
+    params via the broadcast trick (dp_broadcast) — per-example cotangents
+    materialize at O(B x |param|), negligible here;
+  * each of those is its own clipping group (per-layer clipping semantics).
+
+Decode keeps (conv ring state, SSM state) per layer: O(1) in sequence
+length — this is why Zamba2/RWKV run the long_500k shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_layers as dpl
+from repro.core.spec import P
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nheads = d_in // cfg.ssm_head_dim
+    return d_in, nheads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def mamba2_spec(cfg: ModelConfig, *, stack: tuple[int, ...] = (),
+                sensitivity_mult: float = 1.0) -> dict:
+    d = cfg.d_model
+    d_in, nh, n, p = dims(cfg)
+    conv_ch = d_in + 2 * n  # x, B, C go through the depthwise conv
+    s = len(stack)
+    sm = sensitivity_mult
+    return {
+        "in_proj": L.linear_spec(d, 2 * d_in + 2 * n + nh, stack=stack,
+                                 dtype=cfg.dtype, sensitivity_mult=sm),
+        "conv_w": P(stack + (cfg.ssm_conv_kernel, conv_ch), init="normal",
+                    scale=0.2, dtype=cfg.dtype, stack=s, sensitivity_mult=sm),
+        "dt_bias": P(stack + (nh,), init="uniform", scale=0.5, dtype=cfg.dtype,
+                     stack=s, sensitivity_mult=sm),
+        "a_log": P(stack + (nh,), init="uniform", scale=0.5, dtype=cfg.dtype,
+                   stack=s, sensitivity_mult=sm),
+        "d_skip": P(stack + (nh,), init="ones", dtype=cfg.dtype, stack=s,
+                    sensitivity_mult=sm),
+        "norm": L.rmsnorm_spec(d_in, stack=stack, dtype=cfg.dtype),
+        "out_proj": L.linear_spec(d_in, d, stack=stack, dtype=cfg.dtype,
+                                  sensitivity_mult=sm),
+    }
+
+
+def _split_in(cfg, zxbcdt):
+    d_in, nh, n, p = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w_b):
+    """Depthwise causal conv via K shifted adds. xbc: (B, T, C); w_b: (B, K, C)."""
+    k = w_b.shape[1]
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        shift = k - 1 - i
+        seg = xbc[:, : xbc.shape[1] - shift] if shift else xbc
+        seg = jnp.pad(seg, ((0, 0), (shift, 0), (0, 0)))
+        out = out + seg * w_b[:, i][:, None, :]
+    return out
+
+
+def _ssd_chunked(xh, dt, a, B_, C_, chunk):
+    """Chunked SSD. xh: (B,T,H,P); dt: (B,T,H); a: (B,H) (negative);
+    B_, C_: (B,T,N). Returns (y (B,T,H,P), final_state (B,H,P,N))."""
+    b, t, h, p = xh.shape
+    n = B_.shape[-1]
+    q = min(chunk, t)
+    nc = -(-t // q)
+    pad = nc * q - t
+
+    def padt(x):
+        return jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+
+    xh_, dt_, B__, C__ = padt(xh), padt(dt), padt(B_), padt(C_)
+    adt = a[:, None, :] * dt_  # (B, T', H) log-decay per step (<=0)
+    xdt = xh_ * dt_[..., None]
+
+    def r(x, extra=()):  # (B, nc, q, ...)
+        return x.reshape((b, nc, q) + x.shape[2:])
+
+    adt_c, xdt_c = r(adt), r(xdt)
+    B_c, C_c = r(B__), r(C__)
+    cum = jnp.cumsum(adt_c, axis=2)  # (B, nc, q, H)
+    total = cum[:, :, -1]  # (B, nc, H)
+
+    # intra-chunk: Y[q_] = sum_{k<=q_} C_q·B_k exp(cum_q - cum_k) xdt_k
+    ldiff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,q,q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    lmat = jnp.where(mask[None, None, :, :, None], jnp.exp(ldiff), 0.0)
+    cb = jnp.einsum("bcqn,bckn->bcqk", C_c.astype(jnp.float32),
+                    B_c.astype(jnp.float32))
+    y_intra = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", cb, lmat,
+                         xdt_c.astype(jnp.float32))
+
+    # chunk states: S_c = sum_k exp(total - cum_k) B_k xdt_k^T
+    decay_k = jnp.exp(total[:, :, None, :] - cum)  # (B,nc,q,H)
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", B_c.astype(jnp.float32),
+                        decay_k, xdt_c.astype(jnp.float32))
+
+    # inter-chunk recurrence
+    def step(s_prev, inp):
+        st_c, tot_c = inp  # (B,H,P,N), (B,H)
+        s_new = s_prev * jnp.exp(tot_c)[:, :, None, None] + st_c
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B, nc, H, P, N): state BEFORE chunk
+
+    # inter-chunk contribution: Y[q] += C_q · (exp(cum_q) * S_prev)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", C_c.astype(jnp.float32),
+                         jnp.exp(cum), s_prevs)
+    y = (y_intra + y_inter).reshape(b, nc * q, h, p)[:, :t]
+    return y.astype(xh.dtype), s_final
+
+
+def mamba2_block(cfg: ModelConfig, params, x, th):
+    """x: (B, T, D) -> (B, T, D)."""
+    b, t, d = x.shape
+    d_in, nh, n, p = dims(cfg)
+    zxbcdt = L.linear(params["in_proj"], x, th["in_proj"])
+    z, xbc, dt_raw = _split_in(cfg, zxbcdt)
+
+    conv_w = dpl.dp_broadcast(params["conv_w"], th["conv_w"])  # (B, K, C)
+    xbc = jax.nn.silu(_causal_conv(xbc, conv_w).astype(jnp.float32)).astype(x.dtype)
+    xs = xbc[..., :d_in]
+    B_ = xbc[..., d_in: d_in + n]
+    C_ = xbc[..., d_in + n:]
+
+    dt_bias = dpl.dp_broadcast(params["dt_bias"], th["dt_bias"])  # (B, H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + dt_bias[:, None, :])
+    a_log = dpl.dp_broadcast(params["a_log"], th["a_log"])  # (B, H)
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    xh = xs.reshape(b, t, nh, p)
+    y, _ = _ssd_chunked(xh, dt, a, B_, C_, cfg.ssm_chunk)
+    d_skip = dpl.dp_broadcast(params["d_skip"], th["d_skip"])  # (B, H)
+    y = y + xh.astype(jnp.float32) * d_skip[:, None, :, None]
+    y = y.reshape(b, t, d_in).astype(x.dtype)
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = L.rmsnorm(params["norm"], y, th["norm"], eps=cfg.norm_eps)
+    return L.linear(params["out_proj"], y, th["out_proj"])
+
+
+def mamba2_decode(cfg: ModelConfig, params, x, th, conv_state, ssm_state):
+    """One-token decode. x: (B, 1, D); conv_state: (B, K-1, C);
+    ssm_state: (B, H, P, N)."""
+    b = x.shape[0]
+    d_in, nh, n, p = dims(cfg)
+    zxbcdt = L.linear(params["in_proj"], x, th["in_proj"])
+    z, xbc_new, dt_raw = _split_in(cfg, zxbcdt)  # (B,1,*)
+
+    conv_w = dpl.dp_broadcast(params["conv_w"], th["conv_w"])  # (B, K, C)
+    window = jnp.concatenate([conv_state, xbc_new[:, 0][:, None]], axis=1)  # (B,K,C)
+    xbc = jnp.sum(window * conv_w, axis=1, keepdims=True)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    new_conv_state = window[:, 1:]
+
+    xs = xbc[..., :d_in]
+    B_ = xbc[..., d_in: d_in + n]
+    C_ = xbc[..., d_in + n:]
+    dt_bias = dpl.dp_broadcast(params["dt_bias"], th["dt_bias"])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + dt_bias)  # (B, H)
+    a_log = dpl.dp_broadcast(params["a_log"], th["a_log"])
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    xh = xs[:, 0].reshape(b, nh, p).astype(jnp.float32)
+    decay = jnp.exp(a * dt)  # (B, H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xh, B_[:, 0].astype(jnp.float32), dt)
+    new_ssm = ssm_state * decay[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, C_[:, 0].astype(jnp.float32))
+    d_skip = dpl.dp_broadcast(params["d_skip"], th["d_skip"])
+    y = y + xh * d_skip[:, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = L.rmsnorm(params["norm"], y, th["norm"], eps=cfg.norm_eps)
+    return (L.linear(params["out_proj"], y, th["out_proj"]),
+            new_conv_state, new_ssm)

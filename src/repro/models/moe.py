@@ -1,0 +1,191 @@
+"""Mixture-of-Experts: token-choice top-k routing with capacity dispatch.
+
+Design constraints that shaped this implementation:
+  * NO (tokens, E, capacity) one-hot dispatch tensors (GShard-style combine
+    einsums explode at 256 experts x 32k tokens) — dispatch is scatter/gather
+    with per-expert slot indices computed by a cumsum over the routing
+    one-hot (int32, tokens x E, the only O(T·E) object).
+  * Expert weights are STACKED (E, d, f) so the expert axis shards over the
+    `model` mesh axis (expert parallelism); the dispatched activation buffer
+    (E, C, d) shards the same way.
+  * DP: every expert is its own clipping group (the MoE reading of
+    "per-layer"); `dp_expert_linear` computes exact per-example norms
+    through the token mixing (see core.dp_layers). The router is a plain
+    dp_linear.
+  * Dropped tokens (capacity overflow) contribute zero — standard dropping
+    MoE semantics; the load-balance auxiliary loss (Switch style) keeps the
+    router near-uniform. Aux losses are returned per example (DP needs
+    per-example attribution end to end).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_layers as dpl
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.core.spec import P, subth
+
+
+def moe_spec(cfg: ModelConfig, *, stack: tuple[int, ...] = ()) -> dict:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    s = len(stack)
+    out = {
+        "router": L.linear_spec(d, e, stack=stack, dtype=cfg.dtype),
+        # gate+up fused per expert; each expert = one clipping group
+        "w_gu": P(stack + (e, d, 2 * f), dtype=cfg.dtype, stack=s + 1,
+                  group=None),
+        "w_down": P(stack + (e, f, d), dtype=cfg.dtype, stack=s + 1,
+                    group=None),
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        out["shared"] = L.swiglu_spec(d, fs, stack=stack, dtype=cfg.dtype)
+    return out
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8, floor 8
+
+
+def moe_block(cfg: ModelConfig, params, x, th, *, th_prefix: str = ""):
+    """x: (B, T, D) -> (y (B, T, D), aux_loss (B,)).
+
+    th keys: 'router', 'w_gu', 'w_down' (stacked (E, B) thresholds), and
+    'shared/*' when shared experts are configured.
+    """
+    b, t, d = x.shape
+    e, k, f = cfg.num_experts, cfg.num_experts_per_tok, cfg.moe_d_ff
+    n = b * t
+    cap = capacity(cfg, n)
+
+    logits = L.linear(params["router"], x, th["router"])  # (B, T, E)
+    logits = logits.reshape(n, e).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (n, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # ---- slot assignment: position of token within its expert's buffer ----
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)  # (n, k, E)
+    flatoh = onehot.reshape(n * k, e)
+    pos_in_expert = jnp.cumsum(flatoh, axis=0) - flatoh  # (n*k, E)
+    slot = jnp.sum(pos_in_expert * flatoh, axis=-1).reshape(n, k)  # (n, k)
+    expert = gate_idx  # (n, k)
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)  # overflow -> scratch slot
+
+    # ---- dispatch: scatter tokens into (E, cap+1, d) ----
+    xf = x.reshape(n, d)
+    buf = jnp.zeros((e, cap + 1, d), xf.dtype)
+    exp_flat = expert.reshape(-1)
+    slot_flat = slot.reshape(-1)
+    tok_rep = jnp.repeat(jnp.arange(n), k)
+    buf = buf.at[exp_flat, slot_flat].set(xf[tok_rep], mode="drop")
+    buf = buf[:, :cap]  # drop scratch
+
+    # example id per dispatched slot (for exact per-example DP norms)
+    ex_of_token = jnp.repeat(jnp.arange(b), t)  # (n,)
+    exid_buf = jnp.full((e, cap + 1), -1, jnp.int32)
+    exid_buf = exid_buf.at[exp_flat, slot_flat].set(
+        ex_of_token[tok_rep], mode="drop")
+    exid_buf = exid_buf[:, :cap]
+
+    # ---- expert computation (each expert its own DP group) ----
+    h = dpl.dp_expert_linear(params["w_gu"], buf, exid_buf, th["w_gu"])
+    gate_h, up_h = h[..., :f], h[..., f:]
+    act = jax.nn.silu(gate_h.astype(jnp.float32)).astype(h.dtype) * up_h
+    out_buf = dpl.dp_expert_linear(params["w_down"], act, exid_buf,
+                                   th["w_down"])  # (E, cap, d)
+
+    # ---- combine: gather back and weight by gates ----
+    gathered = out_buf[exp_flat, jnp.minimum(slot_flat, cap - 1)]  # (n*k, d)
+    gathered = gathered * (keep.reshape(-1)[:, None]
+                           * gate_vals.reshape(-1)[:, None]).astype(gathered.dtype)
+    y = jax.ops.segment_sum(gathered, tok_rep, num_segments=n)
+    y = y.reshape(b, t, d).astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        y = y + L.swiglu(params["shared"], x, subth(th, "shared"),
+                         f=f * cfg.num_shared_experts)
+
+    # ---- Switch-style load-balance aux loss, per example ----
+    pe = probs.reshape(b, t, e)
+    frac_prob = jnp.mean(pe, axis=1)  # (B, E)
+    top1 = jax.nn.one_hot(gate_idx[:, 0].reshape(b, t), e, dtype=jnp.float32)
+    frac_tok = jnp.mean(top1, axis=1)  # (B, E)
+    aux = cfg.router_aux_coef * e * jnp.sum(frac_prob * frac_tok, axis=-1)
+    return y, aux
+
+
+def capacity_per_example(cfg: ModelConfig, tokens_per_example: int) -> int:
+    c = int(tokens_per_example * cfg.num_experts_per_tok
+            * cfg.capacity_factor / cfg.num_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+def moe_block_grouped(cfg: ModelConfig, params, x, th):
+    """Grouped-dispatch MoE: buffers (B, E, cap_pe, d); per-example DP norms
+    are block-diagonal (dp_expert_linear_grouped). Same routing semantics as
+    moe_block; capacity is enforced PER (example, expert) instead of
+    globally (documented difference; both drop overflow tokens)."""
+    b, t, d = x.shape
+    e, k, f = cfg.num_experts, cfg.num_experts_per_tok, cfg.moe_d_ff
+    cap = capacity_per_example(cfg, t)
+
+    logits = L.linear(params["router"], x, th["router"])  # (B, T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # slot of (token, k) within its (example, expert) bucket
+    onehot = jax.nn.one_hot(gate_idx.reshape(b, t * k), e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot  # (B, T*k, E)
+    slot = jnp.take_along_axis(
+        pos, gate_idx.reshape(b, t * k)[..., None], axis=-1)[..., 0]
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)
+
+    exp_flat = gate_idx.reshape(b, t * k)
+    tok_rep = jnp.broadcast_to(jnp.repeat(jnp.arange(t), k)[None],
+                               (b, t * k))
+    # vmap the scatter over the batch axis: a batched scatter keeps the
+    # sharded batch dim trivially local under GSPMD, whereas scattering with
+    # computed (bidx, e, slot) indices forces a replicate+all-reduce
+    # (measured 1.9 TB/step on granite; EXPERIMENTS.md §Perf A3)
+    xtok = jnp.take_along_axis(x, tok_rep[..., None], axis=1)  # (B, T*k, d)
+
+    def scatter_one(xe, ee, ss):
+        return jnp.zeros((e, cap + 1, d), x.dtype).at[ee, ss].set(
+            xe, mode="drop")
+
+    buf = jax.vmap(scatter_one)(xtok, exp_flat, slot)[:, :, :cap]
+
+    h = dpl.dp_expert_linear_grouped(params["w_gu"], buf, th["w_gu"])
+    act = jax.nn.silu(h[..., :f].astype(jnp.float32)).astype(h.dtype) \
+        * h[..., f:]
+    out_buf = dpl.dp_expert_linear_grouped(params["w_down"], act,
+                                           th["w_down"])  # (B, E, cap, d)
+
+    gathered = jax.vmap(lambda ob, ee, ss: ob[ee, ss])(
+        out_buf, exp_flat, jnp.minimum(slot, cap - 1))
+    gathered = gathered * (keep * gate_vals.reshape(b, t * k)
+                           )[..., None].astype(gathered.dtype)
+    y = jax.vmap(lambda g, tr: jax.ops.segment_sum(g, tr, num_segments=t)
+                 )(gathered, tok_rep)
+    y = y.astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        y = y + L.swiglu(params["shared"], x, subth(th, "shared"),
+                         f=f * cfg.num_shared_experts)
+
+    pe = probs
+    frac_prob = jnp.mean(pe, axis=1)
+    top1 = jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32)
+    frac_tok = jnp.mean(top1, axis=1)
+    aux = cfg.router_aux_coef * e * jnp.sum(frac_prob * frac_tok, axis=-1)
+    return y, aux

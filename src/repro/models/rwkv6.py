@@ -1,0 +1,262 @@
+"""RWKV-6 "Finch": linear-attention time-mix with data-dependent decay.
+
+Time-mix recurrence per head (k-dim x v-dim state S):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+with data-dependent decay w_t = exp(-exp(w_base + tanh(x A_w) B_w)) —
+the defining Finch feature. Channel-mix is the usual squared-ReLU FFN with
+token shift.
+
+Training path offers two formulations (selectable, identical math):
+  * 'scan'    — lax.scan over time (baseline; sequential length-T chain)
+  * 'chunked' — block-parallel linear attention (intra-chunk masked products
+    + inter-chunk state recurrence, SSD-style) — the TPU-friendly form used
+    for the §Perf hillclimb.
+
+DP mapping: r/k/v/g/o projections and the decay LoRA are dp_linear groups;
+mix vectors, w_base, bonus u, and the group-norm scale use dp_broadcast /
+dp_scale. Decode state is O(1) in sequence length (long_500k native).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dp_layers as dpl
+from repro.core.spec import P
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+_DECAY_LORA = 64
+
+
+def dims(cfg: ModelConfig):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    nh = d // hd
+    return d, nh, hd
+
+
+def rwkv6_spec(cfg: ModelConfig, *, stack: tuple[int, ...] = ()) -> dict:
+    d, nh, hd = dims(cfg)
+    s = len(stack)
+    lora = _DECAY_LORA
+    return {
+        "tm": {  # time mix
+            "mix": P(stack + (5, d), init="uniform", scale=0.5,
+                     dtype=cfg.dtype, stack=s),  # r,k,v,g,w token-shift mixes
+            "r": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+            "k": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+            "v": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+            "g": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+            "o": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+            "w_base": P(stack + (d,), init="uniform", scale=1.0,
+                        dtype=cfg.dtype, stack=s),
+            "w_lora_a": L.linear_spec(d, lora, stack=stack, dtype=cfg.dtype),
+            "w_lora_b": L.linear_spec(lora, d, stack=stack, dtype=cfg.dtype),
+            "u": P(stack + (nh, hd), init="uniform", scale=0.5,
+                   dtype=cfg.dtype, stack=s),  # per-head bonus
+            "ln": L.rmsnorm_spec(d, stack=stack, dtype=cfg.dtype),
+        },
+        "cm": {  # channel mix
+            "mix": P(stack + (2, d), init="uniform", scale=0.5,
+                     dtype=cfg.dtype, stack=s),
+            "k": L.linear_spec(d, cfg.d_ff, stack=stack, dtype=cfg.dtype),
+            "v": L.linear_spec(cfg.d_ff, d, stack=stack, dtype=cfg.dtype),
+            "r": L.linear_spec(d, d, stack=stack, dtype=cfg.dtype),
+        },
+    }
+
+
+def _token_shift(x, x_prev_last):
+    """shifted(x)[t] = x[t-1]; position 0 takes x_prev_last (B, 1, D)."""
+    return jnp.concatenate([x_prev_last, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Sequential recurrence. r,k,v: (B,T,H,hd); w: (B,T,H,hd) decay in (0,1);
+    u: (B,H,hd); s0: (B,H,hd,hd). Returns (o (B,T,H,hd), sT)."""
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd) each
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., :, None] * kv)
+        s_new = wt[..., :, None] * s + kv
+        return s_new, o
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    sT, o = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(o, 0, 1), sT
+
+
+def _wkv_chunked(r, k, v, w, u, s0, chunk: int):
+    """Block-parallel form. Same contract as _wkv_scan.
+
+    Within a chunk:  o_t = r_t S_prev W(<t) + sum_{j<t} r_t diag(W(j+1..t-1))
+    ... expressed with cumulative log-decay products; across chunks the
+    (hd, hd) state recurs once per chunk.
+    """
+    b, t, h, d = r.shape
+    q = min(chunk, t)
+    nc = -(-t // q)
+    pad = nc * q - t
+
+    def padt(x, val=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=val)
+
+    r_, k_, v_ = padt(r), padt(k), padt(v)
+    w_ = padt(w, 1.0)
+    logw = jnp.log(jnp.clip(w_.astype(jnp.float32), 1e-12, 1.0))
+
+    def rs(x):
+        return x.reshape(b, nc, q, h, d)
+
+    rc, kc, vc, lw = rs(r_), rs(k_), rs(v_), rs(logw)
+    # cumulative decay within chunk: P_t = prod_{j<=t} w_j  (inclusive)
+    cum = jnp.cumsum(lw, axis=2)  # (B,nc,q,H,D)
+    # attention-like intra weights: A[t,j] = r_t · (P_{t-1}/P_j) k_j for j < t
+    #                              + r_t · (u k_t) for j == t
+    # Factorized as (r_t P_{t-1}/P_ref) · (k_j P_ref/P_j) with the chunk-median
+    # reference so both exponents are bounded by half a chunk's log-decay
+    # (the unshifted form overflows f32 for strong decay); exponents are
+    # additionally clamped at ±70 — pairs hitting the clamp have true decay
+    # factors below e-70 and contribute nothing.
+    ref = cum[:, :, q // 2][:, :, None]  # (B,nc,1,H,D)
+    rt_scaled = rc.astype(jnp.float32) * jnp.exp(
+        jnp.clip(cum - lw - ref, -70.0, 70.0))  # ~ r_t * P_{t-1}/P_ref
+    kj_scaled = kc.astype(jnp.float32) * jnp.exp(
+        jnp.clip(ref - cum, -70.0, 70.0))  # ~ k_j * P_ref/P_j
+    scores = jnp.einsum("bcthd,bcjhd->bcthj", rt_scaled, kj_scaled)
+    mask = jnp.tril(jnp.ones((q, q), bool), k=-1)  # strictly lower
+    scores = jnp.where(mask[None, None, :, None, :], scores, 0.0)
+    diag = jnp.einsum("bcthd,bhd,bcthd->bcth", rc.astype(jnp.float32),
+                      u.astype(jnp.float32), kc.astype(jnp.float32))
+    o_intra = (jnp.einsum("bcthj,bcjhd->bcthd", scores, vc.astype(jnp.float32))
+               + diag[..., None] * vc.astype(jnp.float32))
+
+    # chunk state contribution: S_c = sum_j (P_total/P_j) k_j v_j^T
+    total = cum[:, :, -1]  # (B,nc,H,D)
+    decay_j = jnp.exp(total[:, :, None] - cum)  # (B,nc,q,H,D)
+    states = jnp.einsum("bcjhk,bcjhv->bchkv",
+                        (kc.astype(jnp.float32) * decay_j),
+                        vc.astype(jnp.float32))
+
+    def step(s_prev, inp):
+        st, tot = inp
+        s_new = s_prev * jnp.exp(tot)[..., :, None] + st
+        return s_new, s_prev
+
+    sT, s_prevs = jax.lax.scan(
+        step, s0.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)  # (B,nc,H,K,V)
+
+    # inter-chunk: r_t P_{t-1} S_prev = rt_scaled · (exp(ref) ⊙_k S_prev)
+    s_prevs_scaled = s_prevs * jnp.exp(ref[:, :, 0])[..., None]  # decay on K
+    o_inter = jnp.einsum("bcthk,bchkv->bcthv", rt_scaled, s_prevs_scaled)
+    o = (o_intra + o_inter).reshape(b, nc * q, h, d)[:, :t]
+    return o.astype(r.dtype), sT
+
+
+def _ddlerp(x, xs, mix):
+    """mix in [0,1]-ish: x + mix * (xs - x); mix: (B, D) broadcast."""
+    return x + mix[:, None, :] * (xs - x)
+
+
+def time_mix(cfg: ModelConfig, params, x, th, *, x_prev, state,
+             formulation: str = "scan", chunk: int = 128):
+    """x: (B,T,D). x_prev: (B,1,D) last token of previous segment (zeros at
+    start). state: (B,H,hd,hd). Returns (out, new_x_prev, new_state)."""
+    d, nh, hd = dims(cfg)
+    b, t, _ = x.shape
+    p = params
+    xs = _token_shift(x, x_prev)
+    mix = dpl.dp_broadcast(p["mix"], th["mix"])  # (B, 5, D)
+    xr = _ddlerp(x, xs, mix[:, 0])
+    xk = _ddlerp(x, xs, mix[:, 1])
+    xv = _ddlerp(x, xs, mix[:, 2])
+    xg = _ddlerp(x, xs, mix[:, 3])
+    xw = _ddlerp(x, xs, mix[:, 4])
+
+    r = L.linear(p["r"], xr, th["r"]).reshape(b, t, nh, hd)
+    k = L.linear(p["k"], xk, th["k"]).reshape(b, t, nh, hd)
+    v = L.linear(p["v"], xv, th["v"]).reshape(b, t, nh, hd)
+    g = L.linear(p["g"], xg, th["g"])
+
+    w_base = dpl.dp_broadcast(p["w_base"], th["w_base"])  # (B, D)
+    dd = L.linear(p["w_lora_b"],
+                  jnp.tanh(L.linear(p["w_lora_a"], xw, th["w_lora_a"])),
+                  th["w_lora_b"])  # (B, T, D)
+    w = jnp.exp(-jnp.exp(w_base[:, None].astype(jnp.float32)
+                         + dd.astype(jnp.float32)))  # (0,1)
+    w = w.reshape(b, t, nh, hd)
+
+    u = dpl.dp_broadcast(p["u"], th["u"])  # (B, H, hd)
+    if formulation == "chunked":
+        o, sT = _wkv_chunked(r, k, v, w.astype(jnp.float32), u, state, chunk)
+    else:
+        o, sT = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), w, u, state)
+    o = o.reshape(b, t, d)
+    o = L.rmsnorm(p["ln"], o.astype(x.dtype), th["ln"], eps=cfg.norm_eps)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = L.linear(p["o"], o, th["o"])
+    return out, x[:, -1:], sT
+
+
+def channel_mix(cfg: ModelConfig, params, x, th, *, x_prev):
+    p = params
+    xs = _token_shift(x, x_prev)
+    mix = dpl.dp_broadcast(p["mix"], th["mix"])  # (B, 2, D)
+    xk = _ddlerp(x, xs, mix[:, 0])
+    xr = _ddlerp(x, xs, mix[:, 1])
+    k = L.linear(p["k"], xk, th["k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = L.linear(p["v"], k, th["v"])
+    rgate = jax.nn.sigmoid(L.linear(p["r"], xr, th["r"]).astype(jnp.float32))
+    return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x[:, -1:]
+
+
+def time_mix_decode(cfg: ModelConfig, params, x, th, *, x_prev, state):
+    """Single-token decode: x (B,1,D), x_prev (B,1,D), state (B,H,hd,hd)."""
+    d, nh, hd = dims(cfg)
+    b = x.shape[0]
+    p = params
+    xs = x_prev
+    mix = dpl.dp_broadcast(p["mix"], th["mix"])
+    xr = _ddlerp(x, xs, mix[:, 0])
+    xk = _ddlerp(x, xs, mix[:, 1])
+    xv = _ddlerp(x, xs, mix[:, 2])
+    xg = _ddlerp(x, xs, mix[:, 3])
+    xw = _ddlerp(x, xs, mix[:, 4])
+    r = L.linear(p["r"], xr, th["r"]).reshape(b, nh, hd).astype(jnp.float32)
+    k = L.linear(p["k"], xk, th["k"]).reshape(b, nh, hd).astype(jnp.float32)
+    v = L.linear(p["v"], xv, th["v"]).reshape(b, nh, hd).astype(jnp.float32)
+    g = L.linear(p["g"], xg, th["g"])
+    w_base = dpl.dp_broadcast(p["w_base"], th["w_base"])
+    dd = L.linear(p["w_lora_b"],
+                  jnp.tanh(L.linear(p["w_lora_a"], xw, th["w_lora_a"])),
+                  th["w_lora_b"])
+    w = jnp.exp(-jnp.exp(w_base[:, None].astype(jnp.float32)
+                         + dd.astype(jnp.float32))).reshape(b, nh, hd)
+    u = dpl.dp_broadcast(p["u"], th["u"]).astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]
+    o = jnp.einsum("bhk,bhkv->bhv", r, state + u[..., :, None] * kv)
+    new_state = w[..., :, None] * state + kv
+    o = o.reshape(b, 1, d)
+    o = L.rmsnorm(p["ln"], o.astype(x.dtype), th["ln"], eps=cfg.norm_eps)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    return L.linear(p["o"], o, th["o"]), x, new_state
+
+
+def channel_mix_decode(cfg: ModelConfig, params, x, th, *, x_prev):
+    p = params
+    mix = dpl.dp_broadcast(p["mix"], th["mix"])
+    xk = _ddlerp(x, x_prev, mix[:, 0])
+    xr = _ddlerp(x, x_prev, mix[:, 1])
+    k = L.linear(p["k"], xk, th["k"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = L.linear(p["v"], k, th["v"])
+    rgate = jax.nn.sigmoid(L.linear(p["r"], xr, th["r"]).astype(jnp.float32))
+    return (rgate * kv.astype(jnp.float32)).astype(x.dtype), x

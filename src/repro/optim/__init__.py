@@ -1,0 +1,11 @@
+from repro.optim.optimizers import (
+    Optimizer, adam, adamw, chain_clip_by_global_norm, sgd,
+)
+from repro.optim.schedules import (
+    constant, cosine_decay, linear_decay, wsd, Schedule,
+)
+
+__all__ = [
+    "Optimizer", "adam", "adamw", "sgd", "chain_clip_by_global_norm",
+    "constant", "cosine_decay", "linear_decay", "wsd", "Schedule",
+]

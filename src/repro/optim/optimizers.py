@@ -1,0 +1,117 @@
+"""First-order optimizers with an optax-like (init, update) interface.
+
+Implemented from scratch (no optax offline): SGD(+momentum), Adam, AdamW.
+`update` returns the *delta* to add to params: params <- params + updates.
+All states are pytrees, shard like their parameters, and are scan/jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedules import Schedule, constant
+
+Updates = Any
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Any]
+    update: Callable[[Updates, Any, Params], tuple[Updates, Any]]
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Any  # None-leaf pytree when momentum == 0
+
+
+def sgd(lr: float | Schedule, momentum: float = 0.0,
+        weight_decay: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        mom = _tmap(jnp.zeros_like, params) if momentum else None
+        return SGDState(jnp.zeros((), jnp.int32), mom)
+
+    def update(grads, state, params):
+        step = state.step
+        if weight_decay:
+            grads = _tmap(lambda g, p: g + weight_decay * p, grads, params)
+        if momentum:
+            mom = _tmap(lambda m, g: momentum * m + g, state.momentum, grads)
+            eff = (_tmap(lambda m, g: momentum * m + g, mom, grads)
+                   if nesterov else mom)
+        else:
+            mom, eff = None, grads
+        lr_t = sched(step)
+        updates = _tmap(lambda g: (-lr_t * g).astype(g.dtype), eff)
+        return updates, SGDState(step + 1, mom)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adam(lr: float | Schedule, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0,
+         decoupled: bool = False) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32),
+                         _tmap(jnp.zeros_like, params),
+                         _tmap(jnp.zeros_like, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        if weight_decay and not decoupled:
+            grads = _tmap(lambda g, p: g + weight_decay * p, grads, params)
+        mu = _tmap(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = _tmap(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)).astype(v.dtype),
+                   state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = sched(state.step)
+
+        def upd(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and decoupled:
+                u = u - lr_t * weight_decay * p
+            return u.astype(p.dtype)
+
+        updates = _tmap(upd, mu, nu, params)
+        return updates, AdamState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Schedule, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.01) -> Optimizer:
+    return adam(lr, b1, b2, eps, weight_decay, decoupled=True)
+
+
+def chain_clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    """Non-private global-norm clipping wrapper (for non_private baselines)."""
+
+    def update(grads, state, params):
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree_util.tree_leaves(grads)))
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+        grads = _tmap(lambda g: (g * scale).astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)

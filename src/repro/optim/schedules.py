@@ -1,0 +1,59 @@
+"""Learning-rate schedules (pure functions of the step).
+
+Includes WSD (Warmup-Stable-Decay) from MiniCPM (arXiv:2404.06395), the
+schedule of the assigned minicpm-2b architecture.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def constant(lr: float) -> Schedule:
+    return lambda step: jnp.float32(lr)
+
+
+def _warmup(step, warmup_steps):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup_steps, 1))
+
+
+def linear_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 end_fraction: float = 0.0) -> Schedule:
+    def f(step):
+        w = _warmup(step, warmup_steps)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        return jnp.float32(lr) * w * (1.0 - (1.0 - end_fraction) * frac)
+
+    return f
+
+
+def cosine_decay(lr: float, total_steps: int, warmup_steps: int = 0,
+                 end_fraction: float = 0.1) -> Schedule:
+    def f(step):
+        w = _warmup(step, warmup_steps)
+        frac = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * w * (end_fraction + (1 - end_fraction) * cos)
+
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_steps: int,
+        decay_fraction: float = 0.1, end_fraction: float = 0.01) -> Schedule:
+    """Warmup-Stable-Decay (MiniCPM): warmup, long plateau, sharp exp decay."""
+    decay_steps = max(int(total_steps * decay_fraction), 1)
+    stable_end = total_steps - decay_steps
+
+    def f(step):
+        w = _warmup(step, warmup_steps)
+        in_decay = step > stable_end
+        frac = jnp.clip((step - stable_end) / decay_steps, 0.0, 1.0)
+        decay = jnp.exp(jnp.log(jnp.float32(end_fraction)) * frac)
+        return jnp.float32(lr) * w * jnp.where(in_decay, decay, 1.0)
+
+    return f

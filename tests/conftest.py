@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
+see the single real CPU device; only the dry-run (subprocess) forces 512."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def make_lm_batch_for(cfg, b, t, key):
+    from repro.launch.inputs import concrete_train_batch
+    return concrete_train_batch(cfg, b, t, key)

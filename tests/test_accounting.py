@@ -1,0 +1,73 @@
+"""RDP accountant + Proposition 3.1 budget split."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import accounting as acc
+
+
+def test_epsilon_reference_point():
+    # sanity region for the canonical (sigma=1, q=0.01, T=1000, 1e-5) point
+    eps = acc.compute_epsilon(sigma=1.0, sampling_rate=0.01, steps=1000,
+                              delta=1e-5)
+    assert 1.5 < eps < 3.0
+
+
+def test_no_subsampling_matches_gaussian_composition():
+    # q=1: RDP alpha/(2 sigma^2) per step; eps should be near the analytic
+    # optimum of T*alpha/(2 sigma^2) + log(1/delta)/(alpha-1)
+    sigma, steps, delta = 5.0, 10, 1e-6
+    eps = acc.compute_epsilon(sigma=sigma, sampling_rate=1.0, steps=steps,
+                              delta=delta)
+    alphas = np.linspace(1.01, 200, 5000)
+    analytic = np.min(steps * alphas / (2 * sigma**2)
+                      + np.log1p(-1 / alphas)
+                      - (np.log(delta) + np.log(alphas)) / (alphas - 1))
+    assert abs(eps - analytic) / analytic < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.5, 4.0), st.floats(0.001, 0.05),
+       st.integers(10, 2000))
+def test_monotonicity(sigma, q, steps):
+    e1 = acc.compute_epsilon(sigma=sigma, sampling_rate=q, steps=steps,
+                             delta=1e-5)
+    e2 = acc.compute_epsilon(sigma=sigma * 1.5, sampling_rate=q, steps=steps,
+                             delta=1e-5)
+    e3 = acc.compute_epsilon(sigma=sigma, sampling_rate=q, steps=steps * 2,
+                             delta=1e-5)
+    assert e2 <= e1 + 1e-9  # more noise, less eps
+    assert e3 >= e1 - 1e-9  # more steps, more eps
+
+
+def test_calibration_inverts():
+    sigma = acc.calibrate_sigma(target_eps=3.0, sampling_rate=0.02,
+                                steps=500, delta=1e-5)
+    eps = acc.compute_epsilon(sigma=sigma, sampling_rate=0.02, steps=500,
+                              delta=1e-5)
+    assert eps <= 3.0
+    assert eps > 3.0 * 0.98  # tight
+
+
+def test_prop_3_1_exact():
+    # sigma_new = (sigma^-2 - K/(2 sigma_b)^2)^(-1/2)
+    split = acc.split_noise_multiplier(sigma=1.2, sigma_b=20.0, num_groups=50)
+    lhs = split.sigma_new ** -2
+    rhs = 1.2 ** -2 - 50 / (2 * 20.0) ** 2
+    assert abs(lhs - rhs) < 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.5, 3.0), st.integers(1, 300), st.floats(0.001, 0.5))
+def test_remark_3_1_roundtrip(sigma, k, r):
+    sigma_b = acc.sigma_b_for_fraction(sigma, k, r)
+    split = acc.split_noise_multiplier(sigma, sigma_b, k)
+    assert abs(split.r - r) < 1e-9
+    assert split.sigma_new >= sigma  # paying for quantiles costs noise
+
+
+def test_budget_exhaustion_raises():
+    with pytest.raises(ValueError):
+        acc.split_noise_multiplier(sigma=1.0, sigma_b=0.5, num_groups=10)

@@ -1,0 +1,237 @@
+"""Clip-in-backprop primitives vs per-example jacrev oracles — the core
+correctness contract of the paper's fused per-layer clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dp_layers as dpl
+from repro.core import lora
+from repro.core.clipping import dp_clipped_gradients
+from repro.core.spec import GroupLayout, P, init_params
+
+B, T = 6, 5
+
+
+def _model():
+    spec = {
+        "emb": {"w": P((50, 8), init="embed")},
+        "l1": {"w": P((8, 16)), "b": P((16,), init="zeros")},
+        "norm": {"s": P((16,), init="ones")},
+        "l2": {"w": P((16, 4))},
+    }
+    layout = GroupLayout(spec)
+    params = init_params(spec, jax.random.PRNGKey(0))
+
+    def loss_fn(p, batch, th):
+        ids, y = batch
+        x = dpl.dp_embed(p["emb"]["w"], ids, th["emb"])
+        x = dpl.dp_linear(p["l1"]["w"], p["l1"]["b"], x, th["l1"])
+        x = jnp.tanh(x)
+        mu = jnp.mean(x * x, -1, keepdims=True)
+        x = dpl.dp_scale(p["norm"]["s"], x * jax.lax.rsqrt(mu + 1e-6),
+                         th["norm"])
+        x = dpl.dp_linear(p["l2"]["w"], None, x, th["l2"])
+        logits = jnp.mean(x, axis=1)
+        return -jax.nn.log_softmax(logits)[jnp.arange(y.shape[0]), y]
+
+    ids = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, 50)
+    y = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, 4)
+    return spec, layout, params, loss_fn, (ids, y)
+
+
+@pytest.fixture(scope="module")
+def model():
+    spec, layout, params, loss_fn, batch = _model()
+    inf = layout.pack_value(jnp.inf, B)
+    jac = jax.jacrev(lambda p: loss_fn(p, batch, inf))(params)
+    return spec, layout, params, loss_fn, batch, jac
+
+
+PATHS = {"emb": [("emb", "w")], "l1": [("l1", "w"), ("l1", "b")],
+         "l2": [("l2", "w")], "norm": [("norm", "s")]}
+
+
+def _leaf(tree, path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def _oracle_norms(jac):
+    out = {}
+    for g, plist in PATHS.items():
+        n = jnp.zeros(B)
+        for pth in plist:
+            gg = _leaf(jac, pth).reshape(B, -1)
+            n = n + jnp.sum(gg * gg, -1)
+        out[g] = n
+    return out
+
+
+def test_per_layer_matches_oracle(model):
+    spec, layout, params, loss_fn, batch, jac = model
+    oracle = _oracle_norms(jac)
+    C = jnp.array([0.05, 0.02, 0.03, 0.01])
+    res = dp_clipped_gradients(loss_fn, params, batch, layout,
+                               mode="per_layer", batch_size=B, thresholds=C)
+    for i, g in enumerate(layout.groups):
+        np.testing.assert_allclose(res.norms_sq[i], oracle[g.name], rtol=2e-4)
+        f = jnp.minimum(1.0, C[i] / jnp.sqrt(oracle[g.name] + 1e-12))
+        for pth in PATHS[g.name]:
+            per_ex = _leaf(jac, pth)
+            want = jnp.tensordot(f, per_ex.reshape(B, -1), 1).reshape(
+                per_ex.shape[1:])
+            np.testing.assert_allclose(_leaf(res.grads, pth), want,
+                                       rtol=2e-3, atol=1e-6)
+
+
+def test_ghost_flat_equals_naive_flat(model):
+    spec, layout, params, loss_fn, batch, jac = model
+    r1 = dp_clipped_gradients(loss_fn, params, batch, layout,
+                              mode="ghost_flat", batch_size=B,
+                              flat_threshold=0.05)
+    r2 = dp_clipped_gradients(loss_fn, params, batch, layout,
+                              mode="naive_flat", batch_size=B,
+                              flat_threshold=0.05)
+    for a, b in zip(jax.tree_util.tree_leaves(r1.grads),
+                    jax.tree_util.tree_leaves(r2.grads)):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-6)
+
+
+def test_per_group_matches_oracle(model):
+    spec, layout, params, loss_fn, batch, jac = model
+    oracle = _oracle_norms(jac)
+    names = [g.name for g in layout.groups]
+    assign = jnp.array([0, 0, 1, 1])
+    cg = jnp.array([0.04, 0.03])
+    res = dp_clipped_gradients(loss_fn, params, batch, layout,
+                               mode="per_group", batch_size=B,
+                               group_assignment=assign, group_thresholds=cg)
+    gn = [oracle[names[0]] + oracle[names[1]],
+          oracle[names[2]] + oracle[names[3]]]
+    for i, g in enumerate(layout.groups):
+        f = jnp.minimum(1.0, cg[assign[i]] / jnp.sqrt(gn[int(assign[i])]
+                                                      + 1e-12))
+        for pth in PATHS[g.name]:
+            per_ex = _leaf(jac, pth)
+            want = jnp.tensordot(f, per_ex.reshape(B, -1), 1).reshape(
+                per_ex.shape[1:])
+            np.testing.assert_allclose(_leaf(res.grads, pth), want,
+                                       rtol=2e-3, atol=1e-6)
+
+
+def test_clipped_norms_bounded(model):
+    """Post-clipping invariant: every per-example per-group contribution has
+    norm <= C_k (the DP sensitivity bound)."""
+    spec, layout, params, loss_fn, batch, jac = model
+    oracle = _oracle_norms(jac)
+    C = jnp.array([0.01, 0.01, 0.01, 0.01])
+    for i, g in enumerate(layout.groups):
+        f = jnp.minimum(1.0, C[i] / jnp.sqrt(oracle[g.name] + 1e-12))
+        clipped_norm = f * jnp.sqrt(oracle[g.name])
+        assert bool(jnp.all(clipped_norm <= C[i] * (1 + 1e-4)))
+
+
+def test_unclipped_input_cotangent(model):
+    """Algorithm 1 line 11: the INPUT cotangent must be the unclipped one —
+    per_layer grads at C=inf equal plain grads."""
+    spec, layout, params, loss_fn, batch, jac = model
+    inf_th = jnp.full((layout.num_groups,), jnp.inf)
+    res = dp_clipped_gradients(loss_fn, params, batch, layout,
+                               mode="per_layer", batch_size=B,
+                               thresholds=inf_th)
+    plain = jax.grad(lambda p: jnp.sum(loss_fn(
+        p, batch, layout.pack_value(jnp.inf, B))))(params)
+    for a, b in zip(jax.tree_util.tree_leaves(res.grads),
+                    jax.tree_util.tree_leaves(plain)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+
+
+def test_expert_linear_vs_oracle():
+    """Exact per-example clipping through MoE token mixing."""
+    E, C, din, dout, bsz = 3, 8, 5, 4, 4
+    key = jax.random.PRNGKey(7)
+    w = jax.random.normal(key, (E, din, dout)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (E, C, din))
+    exids = jax.random.randint(jax.random.fold_in(key, 2), (E, C), -1, bsz)
+    x = x * (exids >= 0)[..., None]  # empty slots carry zeros
+    cth = jnp.full((E, bsz), 0.4)
+
+    def loss(w_, c_):
+        y = dpl.dp_expert_linear(w_, x, exids, c_)
+        return jnp.sum(y**2)
+
+    grads, norms = jax.grad(loss, argnums=(0, 1))(w, cth)
+    # oracle: per-example grad of expert e = sum over its slots with ex=i
+    for e in range(E):
+        for i in range(bsz):
+            mask = (np.asarray(exids[e]) == i).astype(np.float32)
+            ge = jax.grad(lambda w_: jnp.sum(
+                (x[e] @ w_) ** 2 * mask[:, None]))(w[e])
+            n_oracle = float(jnp.sum(ge**2))
+            np.testing.assert_allclose(float(norms[e, i]), n_oracle,
+                                       rtol=1e-3, atol=1e-5)
+    # clipped sum
+    for e in range(E):
+        want = np.zeros((din, dout), np.float32)
+        for i in range(bsz):
+            mask = (np.asarray(exids[e]) == i).astype(np.float32)
+            ge = jax.grad(lambda w_: jnp.sum(
+                (x[e] @ w_) ** 2 * mask[:, None]))(w[e])
+            f = min(1.0, 0.4 / float(jnp.sqrt(jnp.sum(ge**2) + 1e-12)))
+            want += f * np.asarray(ge)
+        np.testing.assert_allclose(np.asarray(grads[e]), want, rtol=2e-3,
+                                   atol=1e-5)
+
+
+def test_lora_pair_is_one_group():
+    key = jax.random.PRNGKey(3)
+    din, dout, r, alpha = 10, 6, 3, 8.0
+    w = jax.random.normal(key, (din, dout)) * 0.3
+    a = jax.random.normal(jax.random.fold_in(key, 1), (din, r)) * 0.2
+    bmat = jax.random.normal(jax.random.fold_in(key, 2), (r, dout)) * 0.2
+    x = jax.random.normal(jax.random.fold_in(key, 3), (4, 7, din))
+
+    def loss(ab, c):
+        out = lora.dp_lora_linear(ab["a"], ab["b"], w, x, c, alpha)
+        return jnp.sum(out**2, axis=(1, 2))
+
+    cvec = jnp.full((4,), 0.5)
+    grads, nrm = jax.grad(lambda ab, c: loss(ab, c).sum(),
+                          argnums=(0, 1))({"a": a, "b": bmat}, cvec)
+
+    def single(ab, xi):
+        out = xi @ w + (xi @ ab["a"]) @ ab["b"] * (alpha / r)
+        return jnp.sum(out**2)
+
+    jac = jax.vmap(jax.grad(single), in_axes=(None, 0))({"a": a, "b": bmat}, x)
+    n_o = (jnp.sum(jac["a"].reshape(4, -1) ** 2, -1)
+           + jnp.sum(jac["b"].reshape(4, -1) ** 2, -1))
+    np.testing.assert_allclose(nrm, n_o, rtol=1e-4)
+    f = jnp.minimum(1, 0.5 / jnp.sqrt(n_o + 1e-12))
+    np.testing.assert_allclose(
+        grads["a"], jnp.tensordot(f, jac["a"].reshape(4, -1), 1).reshape(a.shape),
+        rtol=1e-4)
+
+
+def test_blocked_linear_blocks_sum_to_full():
+    key = jax.random.PRNGKey(9)
+    w = jax.random.normal(key, (6, 8)) * 0.3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (3, 5, 6))
+
+    def loss_blk(w_, c_):
+        y = dpl.dp_linear_blocked(w_, None, x, c_, "out")
+        return jnp.sum(y**2)
+
+    cth = jnp.full((3, 4), jnp.inf)  # 4 blocks, no clipping
+    g_blk, n_blk = jax.grad(loss_blk, argnums=(0, 1))(w, cth)
+    g_plain = jax.grad(lambda w_: jnp.sum((x @ w_) ** 2))(w)
+    np.testing.assert_allclose(g_blk, g_plain, rtol=1e-4)
+    # block norms sum to the full-layer norms
+    def loss_full(w_, c_):
+        y = dpl.dp_linear(w_, None, x, c_)
+        return jnp.sum(y**2)
+    _, n_full = jax.grad(loss_full, argnums=(0, 1))(
+        w, jnp.full((3,), jnp.inf))
+    np.testing.assert_allclose(jnp.sum(n_blk, -1), n_full, rtol=1e-4)

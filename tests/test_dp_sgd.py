@@ -1,0 +1,148 @@
+"""DP-SGD integration: modes, microbatching, LoRA freezing, noise stats."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import optim
+from repro.configs import get_config
+from repro.core.dp_sgd import DPConfig, build_plan, make_dp_train_step
+from repro.core.spec import init_params
+from repro.launch.inputs import concrete_train_batch
+from repro.models.transformer import build_model
+
+B, T = 8, 16
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny")
+    m = build_model(cfg)
+    params = init_params(m.spec, jax.random.PRNGKey(0))
+    batch = concrete_train_batch(cfg, B, T, jax.random.PRNGKey(1))
+    return cfg, m, params, batch
+
+
+@pytest.mark.parametrize("mode", ["per_layer", "ghost_flat", "per_group",
+                                  "non_private"])
+def test_modes_run_and_update(mode, tiny):
+    cfg, m, params, batch = tiny
+    assign = tuple(i % 2 for i in range(m.layout.num_groups)) \
+        if mode == "per_group" else None
+    dpc = DPConfig(mode=mode, sigma=1.0, sampling_rate=0.1, steps=10,
+                   adaptive=(mode != "non_private"),
+                   group_assignment=assign)
+    init_fn, step_fn, plan = make_dp_train_step(
+        m.loss_fn, m.spec, m.layout, optim.adam(1e-3), dpc, batch_size=B)
+    opt_state, dp_state = init_fn(params)
+    p2, _, _, met = jax.jit(step_fn)(params, opt_state, dp_state, batch,
+                                     jax.random.PRNGKey(5))
+    assert np.isfinite(float(met.loss))
+    moved = any(not np.allclose(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p2)))
+    assert moved
+
+
+def test_microbatching_is_exact(tiny):
+    cfg, m, params, batch = tiny
+    outs = []
+    for nmb in (1, 4):
+        dpc = DPConfig(mode="per_layer", sigma=1.0, sampling_rate=0.1,
+                       steps=10, adaptive=True, microbatches=nmb)
+        init_fn, step_fn, _ = make_dp_train_step(
+            m.loss_fn, m.spec, m.layout, optim.sgd(0.1), dpc, batch_size=B)
+        opt_state, dp_state = init_fn(params)
+        p2, _, _, met = jax.jit(step_fn)(params, opt_state, dp_state, batch,
+                                         jax.random.PRNGKey(5))
+        outs.append(p2)
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=2e-6)
+
+
+def test_noise_magnitude_statistics(tiny):
+    """With huge thresholds (no clipping) and fixed grads, the update noise
+    std must match sigma_new * S per coordinate (global strategy)."""
+    cfg, m, params, batch = tiny
+    dpc = DPConfig(mode="per_layer", sigma=2.0, sampling_rate=0.1, steps=10,
+                   adaptive=False, init_threshold=1e-6)  # clip ~everything
+    init_fn, step_fn, plan = make_dp_train_step(
+        m.loss_fn, m.spec, m.layout, optim.sgd(1.0), dpc, batch_size=B)
+    # with C tiny, grads ~ 0 and update ~ -lr * noise / B
+    opt_state, dp_state = init_fn(params)
+    p2, _, _, _ = jax.jit(step_fn)(params, opt_state, dp_state, batch,
+                                   jax.random.PRNGKey(7))
+    diffs = jnp.concatenate([
+        (a - b).reshape(-1) for a, b in zip(
+            jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params))
+    ])
+    k = m.layout.num_groups
+    expected_std = plan.sigma_new * jnp.sqrt(k * 1e-12) / B  # S=sqrt(K)*C
+    got = float(jnp.std(diffs))
+    assert abs(got - float(expected_std)) / float(expected_std) < 0.05
+
+
+def test_lora_freezes_base():
+    cfg = dataclasses.replace(get_config("qwen3-4b", reduced=True),
+                              lora_rank=4)
+    m = build_model(cfg)
+    assert m.trainable_key == "lora"
+    params = init_params(m.spec, jax.random.PRNGKey(0))
+    batch = concrete_train_batch(cfg, 4, T, jax.random.PRNGKey(1))
+    dpc = DPConfig(mode="per_layer", sigma=1.0, sampling_rate=0.1, steps=10)
+    init_fn, step_fn, _ = make_dp_train_step(
+        m.loss_fn, m.dp_spec, m.layout, optim.adam(1e-3), dpc, batch_size=4,
+        trainable_key="lora")
+    opt_state, dp_state = init_fn(params)
+    p2, _, _, _ = jax.jit(step_fn)(params, opt_state, dp_state, batch,
+                                   jax.random.PRNGKey(2))
+    for k in params:
+        for a, b in zip(jax.tree_util.tree_leaves(params[k]),
+                        jax.tree_util.tree_leaves(p2[k])):
+            if k == "lora":
+                continue
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    moved = any(not np.allclose(a, b) for a, b in zip(
+        jax.tree_util.tree_leaves(params["lora"]),
+        jax.tree_util.tree_leaves(p2["lora"])))
+    assert moved
+
+
+def test_plan_accounting_consistency(tiny):
+    cfg, m, params, batch = tiny
+    dpc = DPConfig(mode="per_layer", epsilon=4.0, delta=1e-5,
+                   sampling_rate=0.05, steps=200, adaptive=True,
+                   quantile_budget_fraction=0.05)
+    plan = build_plan(dpc, m.layout)
+    assert plan.sigma_new > plan.sigma  # quantile budget costs noise
+    from repro.core.accounting import compute_epsilon
+    eps = compute_epsilon(sigma=plan.sigma, sampling_rate=0.05, steps=200,
+                          delta=1e-5)
+    assert eps <= 4.0 * 1.001
+
+
+def test_fixed_vs_adaptive_threshold_state(tiny):
+    cfg, m, params, batch = tiny
+    for adaptive in (True, False):
+        dpc = DPConfig(mode="per_layer", sigma=1.0, sampling_rate=0.1,
+                       steps=10, adaptive=adaptive, init_threshold=0.5)
+        init_fn, step_fn, _ = make_dp_train_step(
+            m.loss_fn, m.spec, m.layout, optim.sgd(0.1), dpc, batch_size=B)
+        opt_state, dp_state = init_fn(params)
+        _, _, dp2, _ = jax.jit(step_fn)(params, opt_state, dp_state, batch,
+                                        jax.random.PRNGKey(9))
+        changed = not np.allclose(np.asarray(dp2.qstate.thresholds), 0.5)
+        assert changed == adaptive
+
+
+def test_shared_param_sensitivity_mult():
+    cfg = get_config("zamba2-7b", reduced=True)
+    m = build_model(cfg)
+    mults = m.layout.sens_mults
+    assert mults.max() > 1.0  # shared attention sites
+    dpc = DPConfig(mode="per_layer", sigma=1.0, sampling_rate=0.1, steps=10)
+    plan = build_plan(dpc, m.layout)
+    assert plan.sens_mults.max() > 1.0

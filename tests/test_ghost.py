@@ -1,0 +1,100 @@
+"""Ghost-norm identities vs naive per-example materialization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ghost
+
+
+def naive_linear_norms(a, g):
+    a3 = a.reshape(a.shape[0], -1, a.shape[-1]).astype(jnp.float32)
+    g3 = g.reshape(g.shape[0], -1, g.shape[-1]).astype(jnp.float32)
+    pg = jnp.einsum("bti,bto->bio", a3, g3)
+    return jnp.sum(pg**2, axis=(1, 2))
+
+
+@pytest.mark.parametrize("path", ["gram", "gram_chunked", "outer"])
+@pytest.mark.parametrize("shape", [(3, 17, 8, 12), (2, 1100, 6, 10),
+                                   (1, 64, 40, 3)])
+def test_linear_norms_paths(path, shape):
+    b, t, din, dout = shape
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.3
+    got = ghost.linear_norms_sq(a, g, force_path=path)
+    want = naive_linear_norms(a, g)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 40), st.integers(1, 16),
+       st.integers(1, 16))
+def test_linear_norms_auto_path(b, t, din, dout):
+    key = jax.random.PRNGKey(b * 1000 + t)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout))
+    got = ghost.linear_norms_sq(a, g)
+    want = naive_linear_norms(a, g)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+
+def test_bias_norms():
+    key = jax.random.PRNGKey(2)
+    g = jax.random.normal(key, (4, 9, 7))
+    want = jnp.sum(jnp.sum(g, axis=1) ** 2, axis=-1)
+    np.testing.assert_allclose(ghost.bias_norms_sq(g), want, rtol=1e-5)
+
+
+def test_embed_norms_collision_exact():
+    """Repeated tokens within an example must be summed BEFORE the norm."""
+    ids = jnp.array([[1, 1, 2], [3, 4, 3]])
+    g = jnp.arange(2 * 3 * 4, dtype=jnp.float32).reshape(2, 3, 4)
+    # naive: scatter into a (V, 4) table per example, then norm
+    want = []
+    for i in range(2):
+        tab = np.zeros((8, 4), np.float32)
+        for t in range(3):
+            tab[int(ids[i, t])] += np.asarray(g[i, t])
+        want.append(np.sum(tab**2))
+    np.testing.assert_allclose(ghost.embed_norms_sq(ids, g), want, rtol=1e-5)
+
+
+def test_embed_norms_chunked_matches():
+    key = jax.random.PRNGKey(3)
+    ids = jax.random.randint(key, (2, 1500), 0, 50)  # t > chunk -> chunked
+    g = jax.random.normal(jax.random.fold_in(key, 1), (2, 1500, 6))
+    got = ghost.embed_norms_sq(ids, g)
+    # naive
+    want = []
+    for i in range(2):
+        tab = np.zeros((50, 6), np.float32)
+        np.add.at(tab, np.asarray(ids[i]), np.asarray(g[i]))
+        want.append(np.sum(tab**2))
+    np.testing.assert_allclose(got, want, rtol=1e-3)
+
+
+def test_blocked_norms_sum_to_full():
+    key = jax.random.PRNGKey(4)
+    a = jax.random.normal(key, (3, 11, 8))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (3, 11, 12))
+    full = ghost.linear_norms_sq(a, g)
+    blocked = ghost.linear_norms_sq_blocked(a, g, 4, block_axis="out")
+    np.testing.assert_allclose(jnp.sum(blocked, -1), full, rtol=1e-4)
+    blocked_in = ghost.linear_norms_sq_blocked(a, g, 2, block_axis="in")
+    np.testing.assert_allclose(jnp.sum(blocked_in, -1), full, rtol=1e-4)
+
+
+def test_clipped_sums_match_naive():
+    key = jax.random.PRNGKey(5)
+    a = jax.random.normal(key, (4, 7, 5))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (4, 7, 6))
+    f = jax.random.uniform(jax.random.fold_in(key, 2), (4,))
+    want = sum(float(f[i]) * np.asarray(a[i]).T @ np.asarray(g[i])
+               for i in range(4))
+    np.testing.assert_allclose(ghost.clipped_sum_linear(a, g, f), want,
+                               rtol=1e-4)
+    blocked = ghost.clipped_sum_linear_blocked(
+        a, g, jnp.broadcast_to(f[:, None], (4, 3)), block_axis="out")
+    np.testing.assert_allclose(blocked, want, rtol=1e-4)

@@ -1,0 +1,71 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweep in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.clip_reduce import clip_reduce
+from repro.kernels.ghost_norm import ghost_norm
+
+SHAPES = [
+    (2, 8, 16, 24),
+    (3, 300, 130, 70),
+    (1, 513, 33, 1100),
+    (4, 128, 128, 128),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ghost_norm_kernel(shape, dtype):
+    b, t, din, dout = shape
+    key = jax.random.PRNGKey(hash(shape) & 0xFFFF)
+    a = jax.random.normal(key, (b, t, din)).astype(dtype)
+    g = (jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.1
+         ).astype(dtype)
+    got = ghost_norm(a, g, bt=128, dk=128)
+    want = ref.ghost_norm_ref(a, g)
+    rtol = 4e-3 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=rtol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_clip_reduce_kernel(shape, dtype):
+    b, t, din, dout = shape
+    key = jax.random.PRNGKey(hash(shape) & 0xFFF)
+    a = jax.random.normal(key, (b, t, din)).astype(dtype)
+    g = (jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.1
+         ).astype(dtype)
+    f = jax.random.uniform(jax.random.fold_in(key, 2), (b,))
+    got = clip_reduce(a, g, f, bi=128, bj=128, bt=128)
+    want = ref.clip_reduce_ref(a, g, f)
+    rtol = 4e-3 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(got, want, rtol=rtol, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 80), st.integers(1, 50),
+       st.integers(1, 50))
+def test_ghost_norm_property(b, t, din, dout):
+    key = jax.random.PRNGKey(b * 997 + t)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout))
+    got = ghost_norm(a, g, bt=32, dk=32)
+    want = ref.ghost_norm_ref(a, g)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+    assert bool(jnp.all(got >= -1e-5))  # norms² are nonnegative
+
+
+def test_kernel_block_shape_sweep():
+    key = jax.random.PRNGKey(0)
+    a = jax.random.normal(key, (2, 200, 96))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (2, 200, 64))
+    want = ref.ghost_norm_ref(a, g)
+    for bt in (32, 64, 256):
+        for dk in (32, 128):
+            got = ghost_norm(a, g, bt=bt, dk=dk)
+            np.testing.assert_allclose(got, want, rtol=2e-4)

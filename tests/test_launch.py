@@ -1,0 +1,106 @@
+"""Launch-layer units: sharding rules, input specs, HLO analyzer, and the
+end-to-end dry-run on a 4-device debug mesh (subprocess so the forced
+device count never leaks into this process)."""
+import json
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.inputs import serve_batch_specs, train_batch_specs
+from repro.models.config import INPUT_SHAPES
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def test_hlo_analyzer_scan_trip_counts():
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=10)
+        return out
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    txt = jax.jit(f).lower(x, w).compile().as_text()
+    t = analyze_hlo(txt)
+    assert t.flops >= 10 * 2 * 128 * 256 * 256  # trip-count multiplied
+    assert t.flops < 1.2 * 10 * 2 * 128 * 256 * 256 + 10 * 128 * 256 * 4
+
+
+def test_hlo_analyzer_tuple_shapes_with_index_comments():
+    from repro.launch.hlo_analysis import _parse_instr_line
+    line = ('  %while.1 = (s32[], f32[36,64]{1,0}, /*index=5*/f32[2,3]) '
+            'while(%tuple.1), condition=%c, body=%b, '
+            'backend_config={"known_trip_count":{"n":"7"}}')
+    parsed = _parse_instr_line(line)
+    assert parsed is not None
+    name, shape, op, rest = parsed
+    assert op == "while"
+    assert "known_trip_count" in rest
+
+
+def test_input_specs_cover_archs():
+    for arch in ("qwen3-4b", "whisper-medium", "qwen2-vl-72b"):
+        cfg = get_config(arch)
+        specs = train_batch_specs(cfg, INPUT_SHAPES["train_4k"])
+        assert specs["tokens"].shape == (256, 4096)
+        if arch == "whisper-medium":
+            assert "frames" in specs
+        if arch == "qwen2-vl-72b":
+            assert "vision_embeds" in specs
+        s = serve_batch_specs(cfg, INPUT_SHAPES["decode_32k"])
+        assert s["token"].shape == (128, 1)
+
+
+def test_sharding_rules():
+    """Rule table resolves to the expected Megatron layout (unit-level, no
+    devices needed: we check the PartitionSpec assignment logic)."""
+    from repro.core.spec import P
+    from repro.launch.sharding import _spec_for
+    from jax.sharding import PartitionSpec as PS
+    # column parallel
+    assert _spec_for("dense_blocks/attn/qkv/w", P((36, 2560, 6144), stack=1),
+                     16) == PS(None, None, "model")
+    # row parallel
+    assert _spec_for("dense_blocks/attn/o/w", P((36, 4096, 2560), stack=1),
+                     16) == PS(None, "model", None)
+    # expert parallel
+    assert _spec_for("moe_blocks/moe/w_gu", P((61, 256, 7168, 4096),
+                                              stack=2), 16) == \
+        PS(None, "model", None, None)
+    # non-divisible -> replicate
+    assert _spec_for("dense_blocks/attn/qkv/w", P((2, 30, 30), stack=1),
+                     16) == PS()
+    # norm scales replicate
+    assert _spec_for("final_norm/s", P((2560,)), 16) == PS()
+
+
+@pytest.mark.slow
+def test_dryrun_debug_mesh_subprocess():
+    """End-to-end: lower+compile a reduced arch on a 4-device mesh in a
+    subprocess (train + decode), assert ok status and collective parse."""
+    code = (
+        "import sys, json\n"
+        "from repro.launch.dryrun import run_one\n"
+        "r1 = run_one('qwen3-4b', 'train_4k', 'debug', save=False, debug=True)\n"
+        "r2 = run_one('rwkv6-7b', 'decode_32k', 'debug', save=False, debug=True)\n"
+        "print('RESULT', json.dumps([{k: v for k, v in r.items()"
+        " if k in ('status','flops','error')} for r in (r1, r2)]))\n"
+    )
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, env=env, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    m = re.search(r"RESULT (.*)", out.stdout)
+    rs = json.loads(m.group(1))
+    for r in rs:
+        assert r["status"] == "ok", r
+        assert r["flops"] > 0

@@ -1,0 +1,71 @@
+"""Noise allocation strategies (paper Sec 3.3 + Appendix E)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import noise as N
+
+
+def test_global_strategy_total_norm():
+    # V_G ∝ (sum C_k^2) * (sum d_k)
+    c = jnp.array([1.0, 2.0, 3.0])
+    d = jnp.array([10.0, 20.0, 30.0])
+    v = N.total_noise_sq_norm("global", c, d, sigma_new=1.0)
+    want = float(jnp.sum(c**2) * jnp.sum(d))
+    assert abs(float(v) - want) / want < 1e-6
+
+
+def test_equal_budget_total_norm():
+    # V_E ∝ K * sum d_k C_k^2
+    c = jnp.array([1.0, 2.0, 3.0])
+    d = jnp.array([10.0, 20.0, 30.0])
+    v = N.total_noise_sq_norm("equal_budget", c, d, sigma_new=1.0)
+    want = float(len(c) * jnp.sum(d * c**2))
+    assert abs(float(v) - want) / want < 1e-6
+
+
+def test_weighted_total_norm():
+    c = jnp.array([1.0, 2.0])
+    d = jnp.array([4.0, 9.0])
+    v = N.total_noise_sq_norm("weighted", c, d, sigma_new=1.0)
+    want = float(jnp.sum(d) * jnp.sum(c**2))
+    assert abs(float(v) - want) / want < 1e-6
+
+
+def test_equal_budget_is_communication_free():
+    """Per-device clipping property: each group's std depends only on its
+    OWN threshold (and K), never on other groups' thresholds."""
+    d = jnp.array([10.0, 20.0, 30.0])
+    c1 = jnp.array([1.0, 2.0, 3.0])
+    c2 = jnp.array([1.0, 99.0, 3.0])  # perturb group 1 only
+    s1 = N.group_noise_stds("equal_budget", c1, d, 1.0)
+    s2 = N.group_noise_stds("equal_budget", c2, d, 1.0)
+    np.testing.assert_allclose(s1[0], s2[0], rtol=1e-6)
+    np.testing.assert_allclose(s1[2], s2[2], rtol=1e-6)
+    # global strategy does NOT have this property
+    g1 = N.group_noise_stds("global", c1, d, 1.0)
+    g2 = N.group_noise_stds("global", c2, d, 1.0)
+    assert not np.allclose(g1[0], g2[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.floats(0.5, 2.0))
+def test_sensitivity_identity(k, scale):
+    """S*gamma_k inequality: global noise std = sigma * sqrt(sum C^2)."""
+    c = jnp.arange(1.0, k + 1) * scale
+    d = jnp.ones(k) * 7
+    stds = N.group_noise_stds("global", c, d, 2.0)
+    want = 2.0 * float(jnp.sqrt(jnp.sum(c**2)))
+    np.testing.assert_allclose(np.asarray(stds), want, rtol=1e-5)
+
+
+def test_add_gaussian_noise_stat():
+    grads = {"a": {"w": jnp.zeros((200, 50))}, "b": {"w": jnp.zeros((100,))}}
+    gids = {"a": {"w": 0}, "b": {"w": 1}}
+    stds = jnp.array([2.0, 0.5])
+    out = N.add_gaussian_noise(grads, gids, stds, jax.random.PRNGKey(0))
+    sa = float(jnp.std(out["a"]["w"]))
+    sb = float(jnp.std(out["b"]["w"]))
+    assert abs(sa - 2.0) < 0.1
+    assert abs(sb - 0.5) < 0.1

@@ -1,0 +1,81 @@
+"""Private quantile tracker (Andrew et al. 2019 geometric update)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantile import clip_counts, init_quantile_state, update_thresholds
+
+
+def _run_tracker(norm_stream, target, steps, lr=0.3, sigma_b=0.0, k=1):
+    state = init_quantile_state(np.ones(k), target_quantile=target, lr=lr,
+                                sigma_b=sigma_b)
+    key = jax.random.PRNGKey(0)
+    for i in range(steps):
+        norms_sq = jnp.asarray(norm_stream(i)) ** 2  # (K, B)
+        counts = clip_counts(norms_sq, state.thresholds)
+        state = update_thresholds(state, counts, norms_sq.shape[-1],
+                                  jax.random.fold_in(key, i))
+    return state
+
+
+def test_converges_to_quantile():
+    rng = np.random.default_rng(0)
+    data = rng.lognormal(0.0, 0.5, size=(1, 256))
+    state = _run_tracker(lambda i: data, target=0.7, steps=300)
+    got = float(state.thresholds[0])
+    want = float(np.quantile(data, 0.7))
+    assert abs(got - want) / want < 0.15
+
+
+def test_tracks_drift():
+    rng = np.random.default_rng(1)
+    base = rng.lognormal(0.0, 0.3, size=(1, 128))
+
+    def stream(i):
+        return base * (1.0 + 0.01 * i)  # norms grow 1%/step
+
+    state = _run_tracker(stream, target=0.5, steps=400)
+    want = float(np.quantile(base * (1.0 + 0.01 * 399), 0.5))
+    got = float(state.thresholds[0])
+    assert abs(got - want) / want < 0.3  # tracks within lag
+
+
+def test_private_noise_unbiased_direction():
+    # with sigma_b > 0 the update is noisy but still converges on average
+    rng = np.random.default_rng(2)
+    data = rng.lognormal(0.0, 0.4, size=(1, 512))
+    state = _run_tracker(lambda i: data, target=0.5, steps=400,
+                         sigma_b=5.0)
+    want = float(np.quantile(data, 0.5))
+    got = float(state.thresholds[0])
+    assert abs(got - want) / want < 0.35
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.1, 0.9), st.floats(0.2, 5.0))
+def test_update_direction(q, c0):
+    """If every norm is below C, C must shrink (too many clipped... i.e.
+    b/B = 1 > q); if all above, C must grow."""
+    state = init_quantile_state(np.array([c0]), target_quantile=q, lr=0.3,
+                                sigma_b=0.0)
+    below = jnp.full((1, 64), (c0 * 0.5) ** 2)
+    counts = clip_counts(below, state.thresholds)
+    s2 = update_thresholds(state, counts, 64, jax.random.PRNGKey(0))
+    assert float(s2.thresholds[0]) < c0
+    above = jnp.full((1, 64), (c0 * 2.0) ** 2)
+    counts = clip_counts(above, state.thresholds)
+    s3 = update_thresholds(state, counts, 64, jax.random.PRNGKey(0))
+    assert float(s3.thresholds[0]) > c0
+
+
+def test_multi_group_independent():
+    state = init_quantile_state(np.ones(3), target_quantile=0.5, lr=0.3,
+                                sigma_b=0.0)
+    norms_sq = jnp.stack([jnp.full((8,), 0.01),   # all below -> shrink
+                          jnp.full((8,), 100.0),  # all above -> grow
+                          jnp.full((8,), 1.0)])   # boundary
+    counts = clip_counts(norms_sq, state.thresholds)
+    s2 = update_thresholds(state, counts, 8, jax.random.PRNGKey(0))
+    assert float(s2.thresholds[0]) < 1.0
+    assert float(s2.thresholds[1]) > 1.0
