@@ -1,7 +1,9 @@
 """Checkpointing: msgpack + zstd sharded pytree store (no orbax offline).
 
 Layout:  <dir>/step_<N>/manifest.msgpack   (treedef, shapes, dtypes, shards)
-         <dir>/step_<N>/shard_<i>.bin.zst  (concatenated raw leaf bytes)
+         <dir>/step_<N>/shard_<i>.bin.zst  (concatenated raw leaf bytes;
+         .bin.zz when zstandard is unavailable and zlib is used — the
+         manifest's "codec" field is authoritative)
 
 Leaves are written in tree_flatten order, split into ~`shard_bytes` shards so
 very large checkpoints stream instead of materializing one blob. Restore
@@ -19,9 +21,35 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as zstd
+except ImportError:  # container lacks zstandard: fall back to stdlib zlib
+    zstd = None
+import zlib
 
 _SHARD_BYTES = 256 * 1024 * 1024
+
+
+def _compressor():
+    if zstd is not None:
+        return "zstd", zstd.ZstdCompressor(level=3).compress
+    return "zlib", lambda raw: zlib.compress(raw, 6)
+
+
+_SHARD_SUFFIX = {"zstd": ".bin.zst", "zlib": ".bin.zz"}
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstd is None:
+            raise ModuleNotFoundError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed")
+        return zstd.ZstdDecompressor().decompress
+    if codec == "zlib":
+        return zlib.decompress
+    raise ValueError(f"unknown checkpoint codec {codec!r}")
 
 
 def _leaf_meta(x) -> dict:
@@ -52,14 +80,21 @@ def save_checkpoint(directory: str, step: int, tree,
         cur += len(raw)
         metas.append({"shape": list(arr.shape), "dtype": dtype,
                       "shard": len(shards) - 1, "bytes": len(raw)})
-    cctx = zstd.ZstdCompressor(level=3)
+    codec, compress = _compressor()
+    suffix = _SHARD_SUFFIX[codec]  # extension stays truthful to the codec
     for i, blobs in enumerate(shards):
-        with open(os.path.join(path, f"shard_{i:04d}.bin.zst"), "wb") as f:
-            f.write(cctx.compress(b"".join(blobs)))
+        with open(os.path.join(path, f"shard_{i:04d}{suffix}"), "wb") as f:
+            f.write(compress(b"".join(blobs)))
+    # treedef blob is advisory only (restore uses the caller's template);
+    # proto serialization rejects user-defined nodes (NamedTuple states)
+    try:
+        treedef_blob = (jax.tree_util.tree_structure(tree)
+                        .serialize_using_proto())
+    except (AttributeError, ValueError):
+        treedef_blob = None
     manifest = {
-        "treedef": jax.tree_util.tree_structure(tree).serialize_using_proto()
-        if hasattr(jax.tree_util.tree_structure(tree), "serialize_using_proto")
-        else None,
+        "codec": codec,
+        "treedef": treedef_blob,
         "num_shards": len(shards),
         "leaves": metas,
         "step": step,
@@ -74,11 +109,13 @@ def load_checkpoint(directory: str, step: int, template):
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
-    dctx = zstd.ZstdDecompressor()
+    codec = manifest.get("codec", "zstd")
+    decompress = _decompressor(codec)
+    suffix = _SHARD_SUFFIX[codec]
     shard_data = []
     for i in range(manifest["num_shards"]):
-        with open(os.path.join(path, f"shard_{i:04d}.bin.zst"), "rb") as f:
-            shard_data.append(dctx.decompress(f.read()))
+        with open(os.path.join(path, f"shard_{i:04d}{suffix}"), "rb") as f:
+            shard_data.append(decompress(f.read()))
     offsets = [0] * manifest["num_shards"]
     leaves = []
     for meta in manifest["leaves"]:

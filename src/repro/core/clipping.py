@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.spec import GroupLayout
+from repro.kernels import backend
 
 MODES = ("non_private", "per_layer", "ghost_flat", "per_group", "naive_flat")
 
@@ -72,7 +73,10 @@ def _norms_only(loss_fn, params, batch, thresholds_tree):
     def f(t):
         return _sum_loss(loss_fn, params, batch, t)
 
-    return jax.value_and_grad(f)(thresholds_tree)
+    # norms-only pass: disable the fused norm+clip kernel so the unused
+    # clipped-sum contraction stays a separate op XLA can dead-code-eliminate
+    with backend.scoped(prefer_fused=False):
+        return jax.value_and_grad(f)(thresholds_tree)
 
 
 def _grads_only(loss_fn, params, batch, thresholds_tree, trainable_key):

@@ -24,6 +24,11 @@ per-device) clipping reuse the same primitives: pass 1 reads norms with
 c=+inf (XLA dead-code-eliminates the unused weight contractions), the driver
 computes group factors f_i, and pass 2 runs with c = -f_i which yields
 exactly the group-clipped sums.
+
+Every ghost op below resolves through the backend engine
+(`repro.kernels.backend.active()`) at trace time — `xla` reference paths,
+`pallas` kernels, or `auto` cost-model dispatch. Select with
+`backend.scoped(...)` (done by `make_dp_train_step` from `DPConfig.backend`).
 """
 from __future__ import annotations
 
@@ -33,18 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ghost
-
-_EPS = 1e-12
-
-
-def clip_factor(c: jax.Array, norms_sq: jax.Array) -> jax.Array:
-    """Per-example clip factor from encoded thresholds (see module doc)."""
-    c = c.astype(jnp.float32)
-    n = norms_sq.astype(jnp.float32)
-    clipped = jnp.minimum(1.0, c * jax.lax.rsqrt(n + _EPS))
-    factor = jnp.where(jnp.isinf(c), 1.0, clipped)
-    return jnp.where(c < 0, -c, factor)
+from repro.core.ghost import clip_factor  # noqa: F401  (re-export, public API)
+from repro.kernels import backend
 
 
 def _int_zero_cotangent(x):
@@ -72,17 +67,15 @@ def _dp_linear_fwd(w, b, x, c):
 def _dp_linear_bwd(res, gy):
     w, b, x, c = res
     has_bias = b is not None
+    eng = backend.active()
     dx = gy @ w.T
-    lead = x.shape[:-1]
     bsz = x.shape[0]
     a3 = x.reshape(bsz, -1, x.shape[-1])
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
-    n = ghost.linear_norms_sq(a3, g3)
-    if has_bias:
-        n = n + ghost.bias_norms_sq(g3)
-    f = clip_factor(c, n)
-    dw = ghost.clipped_sum_linear(a3, g3, f).astype(w.dtype)
-    db = ghost.clipped_sum_bias(g3, f).astype(w.dtype) if has_bias else None
+    extra = eng.bias_norms_sq(g3) if has_bias else None
+    n, f, dw = eng.linear_clip(a3, g3, c, extra)
+    dw = dw.astype(w.dtype)
+    db = eng.clipped_sum_bias(g3, f).astype(w.dtype) if has_bias else None
     dc = n  # norms² through the threshold side channel
     return dw, db, dx, dc
 
@@ -117,12 +110,13 @@ def _dp_linear_blocked_fwd(w, b, x, c, block_axis):
 def _dp_linear_blocked_bwd(block_axis, res, gy):
     w, b, x, c = res
     has_bias = b is not None
+    eng = backend.active()
     dx = gy @ w.T
     bsz = x.shape[0]
     a3 = x.reshape(bsz, -1, x.shape[-1])
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
     m = c.shape[-1]
-    n = ghost.linear_norms_sq_blocked(a3, g3, m, block_axis=block_axis)
+    n = eng.linear_norms_sq_blocked(a3, g3, m, block_axis=block_axis)
     if has_bias:
         # bias columns live with the 'out' blocks; for 'in' blocking the bias
         # is whole on every shard -> fold into block 0 to keep accounting
@@ -132,17 +126,17 @@ def _dp_linear_blocked_bwd(block_axis, res, gy):
             sb = jnp.sum(gb, axis=1)
             n = n + jnp.sum(sb.astype(jnp.float32) ** 2, axis=-1)
         else:
-            n = n.at[:, 0].add(ghost.bias_norms_sq(g3))
+            n = n.at[:, 0].add(eng.bias_norms_sq(g3))
     f = clip_factor(c, n)  # (B, M)
-    dw = ghost.clipped_sum_linear_blocked(a3, g3, f, block_axis=block_axis
-                                          ).astype(w.dtype)
+    dw = eng.clipped_sum_linear_blocked(a3, g3, f, block_axis=block_axis
+                                        ).astype(w.dtype)
     if has_bias:
         if block_axis == "out":
             gb = g3.reshape(bsz, g3.shape[1], m, -1)
             db = jnp.einsum("btmo,bm->mo", gb,
                             f.astype(g3.dtype)).reshape(-1).astype(w.dtype)
         else:
-            db = ghost.clipped_sum_bias(g3, f[:, 0]).astype(w.dtype)
+            db = eng.clipped_sum_bias(g3, f[:, 0]).astype(w.dtype)
     else:
         db = None
     return dw, db, dx, n
@@ -170,12 +164,13 @@ def _dp_embed_fwd(table, ids, c):
 def _dp_embed_bwd(res, gy):
     sentinel, ids, c = res
     vocab, dtype = sentinel.shape[0], sentinel.dtype
+    eng = backend.active()
     bsz = ids.shape[0]
     ids2 = ids.reshape(bsz, -1)
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
-    n = ghost.embed_norms_sq(ids2, g3)
+    n = eng.embed_norms_sq(ids2, g3)
     f = clip_factor(c, n)
-    dtable = ghost.clipped_sum_embed(ids2, g3, f, vocab).astype(dtype)
+    dtable = eng.clipped_sum_embed(ids2, g3, f, vocab).astype(dtype)
     return dtable, _int_zero_cotangent(ids), n
 
 
@@ -198,13 +193,11 @@ def _dp_scale_fwd(s, xhat, c):
 
 def _dp_scale_bwd(res, gy):
     s, xhat, c = res
+    eng = backend.active()
     dxhat = gy * s
-    bsz = xhat.shape[0]
-    gx = (gy * xhat).reshape(bsz, -1, xhat.shape[-1])
-    per_ex = jnp.sum(gx.astype(jnp.float32), axis=1)  # (B, d)
-    n = jnp.sum(per_ex * per_ex, axis=-1)
+    n = eng.scale_norms_sq(xhat, gy)
     f = clip_factor(c, n)
-    ds = jnp.einsum("bd,b->d", per_ex, f).astype(s.dtype)
+    ds = eng.clipped_sum_scale(xhat, gy, f).astype(s.dtype)
     return ds, dxhat, n
 
 
@@ -224,12 +217,12 @@ def _dp_shift_fwd(b, x, c):
 def _dp_shift_bwd(res, gy):
     sentinel, c = res
     dtype = sentinel.dtype
+    eng = backend.active()
     bsz = gy.shape[0]
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
-    per_ex = jnp.sum(g3.astype(jnp.float32), axis=1)
-    n = jnp.sum(per_ex * per_ex, axis=-1)
+    n = eng.bias_norms_sq(g3)
     f = clip_factor(c, n)
-    db = jnp.einsum("bd,b->d", per_ex, f).astype(dtype)
+    db = eng.clipped_sum_bias(g3, f).astype(dtype)
     return db, gy, n
 
 
@@ -257,7 +250,7 @@ def _dp_broadcast_fwd(p, c):
 def _dp_broadcast_bwd(res, gy):
     sentinel, c = res
     dtype = sentinel.dtype
-    n = ghost.vector_norms_sq(gy)
+    n = backend.active().vector_norms_sq(gy)
     f = clip_factor(c, n)
     dp = jnp.tensordot(f.astype(jnp.float32),
                        gy.astype(jnp.float32), axes=1).astype(dtype)

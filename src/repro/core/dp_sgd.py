@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import accounting, noise as noise_lib
 from repro.core.clipping import LossFn, dp_clipped_gradients
+from repro.kernels import backend as ghost_backend
 from repro.core.quantile import QuantileState, clip_counts, init_quantile_state, update_thresholds
 from repro.core.spec import GroupLayout, P, SpecTree, _walk
 
@@ -50,6 +51,12 @@ class DPConfig:
     threshold_rescale: float | None = None
     # --- per_group / per-device mode ---
     group_assignment: tuple[int, ...] | None = None  # layout-group -> supergroup
+    # --- ghost-op backend (repro.kernels.backend) ---
+    backend: str = "auto"  # xla | pallas | auto — engine for the ghost ops;
+    #   scoped around the step function so jitted traces capture it
+    #   statically. auto resolves to xla off-TPU. None-like inheritance of
+    #   tunables (outer_max_elems, tile sizes) comes from the enclosing
+    #   backend.scoped(...) if any.
     # --- misc ---
     noise_dtype: Any = jnp.float32
     microbatches: int = 1  # gradient accumulation (Algorithm 2 structure):
@@ -300,6 +307,13 @@ def make_dp_train_step(
         return ClipResult(g_sum, norms, loss_sum / nmb)
 
     def step_fn(params, opt_state, dp_state, batch, key):
+        # scoped (not global) engine: the jitted trace of this function
+        # captures cfg.backend statically; tunables inherit from any
+        # enclosing backend.scoped(...) (e.g. the dry-run's outer cap).
+        with ghost_backend.scoped(cfg.backend):
+            return _step(params, opt_state, dp_state, batch, key)
+
+    def _step(params, opt_state, dp_state, batch, key):
         k_noise, k_q = jax.random.split(jax.random.fold_in(key, dp_state.step))
         thresholds = dp_state.qstate.thresholds  # (G,)
         if (cfg.threshold_rescale is not None

@@ -46,15 +46,26 @@ def outer_path_cost(t: int, din: int, dout: int) -> int:
 # Memory guardrails for path selection (elements, not bytes).
 # NOTE (§Perf): these reason about LOGICAL shapes; under model-axis sharding
 # the outer path's (B, din, dout) transient is sharded on dout and the cap
-# can safely be raised ~model_size x (configure()), which also avoids the
-# gram path's un-shardable T² work — a large win at long sequence.
-_OUTER_MAX_ELEMS = 1 << 22  # per-example materialized grad cap (outer path)
-_GRAM_CHUNK = 1024  # row-block size for the chunked gram path
+# can safely be raised ~model_size x (scoped engine config — see
+# repro.kernels.backend), which also avoids the gram path's un-shardable
+# T² work — a large win at long sequence.
+DEFAULT_OUTER_MAX_ELEMS = 1 << 22  # per-example materialized grad cap
+DEFAULT_GRAM_CHUNK = 1024  # row-block size for the chunked gram path
+_OUTER_MAX_ELEMS = DEFAULT_OUTER_MAX_ELEMS
+_GRAM_CHUNK = DEFAULT_GRAM_CHUNK
+
+_EPS = 1e-12
 
 
 def configure(*, outer_max_elems: int | None = None,
               gram_chunk: int | None = None) -> dict:
-    """Set ghost-path policy (returns the previous values)."""
+    """Set module-global ghost-path policy (returns the previous values).
+
+    DEPRECATED for engine users: prefer `repro.kernels.backend.scoped(...)`,
+    which threads the policy through without mutating globals — jitted step
+    functions then capture their policy statically at trace time. Direct
+    callers of this module still honor these globals as defaults.
+    """
     global _OUTER_MAX_ELEMS, _GRAM_CHUNK
     prev = {"outer_max_elems": _OUTER_MAX_ELEMS, "gram_chunk": _GRAM_CHUNK}
     if outer_max_elems is not None:
@@ -64,13 +75,32 @@ def configure(*, outer_max_elems: int | None = None,
     return prev
 
 
-def linear_norms_sq(a: jax.Array, g: jax.Array, *, force_path: str | None = None
-                    ) -> jax.Array:
+def clip_factor(c: jax.Array, norms_sq: jax.Array) -> jax.Array:
+    """Per-example clip factor from encoded thresholds.
+
+    Encoding (one mechanism drives every clipping mode — see
+    core.dp_layers module doc):
+        c > 0     -> min(1, c / ||g_i||)   (clip to threshold)
+        c == +inf -> 1                     (no clipping)
+        c < 0     -> |c|                   (direct scale, two-pass modes)
+    """
+    c = c.astype(jnp.float32)
+    n = norms_sq.astype(jnp.float32)
+    clipped = jnp.minimum(1.0, c * jax.lax.rsqrt(n + _EPS))
+    factor = jnp.where(jnp.isinf(c), 1.0, clipped)
+    return jnp.where(c < 0, -c, factor)
+
+
+def linear_norms_sq(a: jax.Array, g: jax.Array, *,
+                    force_path: str | None = None,
+                    outer_max_elems: int | None = None,
+                    gram_chunk: int | None = None) -> jax.Array:
     """(B,) squared Frobenius norms of per-example grads A_i^T G_i.
 
     a: (B, T, d_in) or (B, d_in) activations into the layer.
     g: (B, T, d_out) or (B, d_out) cotangents w.r.t. the layer output.
     force_path: 'gram' | 'gram_chunked' | 'outer' | None (auto).
+    outer_max_elems / gram_chunk: explicit policy (None -> module globals).
 
     Auto selection minimizes flops subject to a memory cap: the outer path
     transiently materializes (B, d_in, d_out) so it is only allowed for
@@ -78,6 +108,9 @@ def linear_norms_sq(a: jax.Array, g: jax.Array, *, force_path: str | None = None
     (B, chunk, T) row blocks when T is large — the same blocking the Pallas
     kernel uses in VMEM.
     """
+    outer_cap = (_OUTER_MAX_ELEMS if outer_max_elems is None
+                 else outer_max_elems)
+    chunk = _GRAM_CHUNK if gram_chunk is None else gram_chunk
     a3, g3 = _as3d(a).astype(ACC_DTYPE), _as3d(g).astype(ACC_DTYPE)
     b, t, din = a3.shape
     dout = g3.shape[-1]
@@ -86,10 +119,10 @@ def linear_norms_sq(a: jax.Array, g: jax.Array, *, force_path: str | None = None
         return (jnp.sum(a3 * a3, axis=(1, 2)) * jnp.sum(g3 * g3, axis=(1, 2)))
     path = force_path
     if path is None:
-        outer_ok = din * dout <= _OUTER_MAX_ELEMS
+        outer_ok = din * dout <= outer_cap
         if outer_ok and outer_path_cost(t, din, dout) < gram_path_cost(t, din, dout):
             path = "outer"
-        elif t > _GRAM_CHUNK:
+        elif t > chunk:
             path = "gram_chunked"
         else:
             path = "gram"
@@ -98,12 +131,12 @@ def linear_norms_sq(a: jax.Array, g: jax.Array, *, force_path: str | None = None
         gram_g = jnp.einsum("bto,bso->bts", g3, g3)
         return jnp.sum(gram_a * gram_g, axis=(1, 2))
     if path == "gram_chunked":
-        nb = -(-t // _GRAM_CHUNK)
-        pad = nb * _GRAM_CHUNK - t
+        nb = -(-t // chunk)
+        pad = nb * chunk - t
         ap = jnp.pad(a3, ((0, 0), (0, pad), (0, 0)))
         gp = jnp.pad(g3, ((0, 0), (0, pad), (0, 0)))
-        ac = ap.reshape(b, nb, _GRAM_CHUNK, din)
-        gc = gp.reshape(b, nb, _GRAM_CHUNK, dout)
+        ac = ap.reshape(b, nb, chunk, din)
+        gc = gp.reshape(b, nb, chunk, dout)
 
         def body(acc, blk):
             ablk, gblk = blk  # (B, chunk, d)
@@ -128,7 +161,8 @@ def bias_norms_sq(g: jax.Array) -> jax.Array:
     return jnp.sum(s * s, axis=-1)
 
 
-def embed_norms_sq(ids: jax.Array, g: jax.Array) -> jax.Array:
+def embed_norms_sq(ids: jax.Array, g: jax.Array, *,
+                   gram_chunk: int | None = None) -> jax.Array:
     """(B,) squared norms of per-example embedding grads (collision-exact).
 
     Per-example grad of the embedding table is the scatter-add of cotangent
@@ -137,21 +171,22 @@ def embed_norms_sq(ids: jax.Array, g: jax.Array) -> jax.Array:
         ||grad_i||^2 = sum_{t,t'} 1[ids_t == ids_t'] <g_t, g_t'>
                      = < EqualityMask_i , G_i G_i^T >.
     """
+    chunk = _GRAM_CHUNK if gram_chunk is None else gram_chunk
     ids2 = ids.reshape(ids.shape[0], -1)
     g3 = _as3d(g).astype(ACC_DTYPE)
     b, t, d = g3.shape
-    if t <= _GRAM_CHUNK:
+    if t <= chunk:
         eq = (ids2[:, :, None] == ids2[:, None, :]).astype(ACC_DTYPE)
         gram_g = jnp.einsum("btd,bsd->bts", g3, g3)
         return jnp.sum(eq * gram_g, axis=(1, 2))
     # chunked: row blocks against the full sequence
-    nb = -(-t // _GRAM_CHUNK)
-    pad = nb * _GRAM_CHUNK - t
+    nb = -(-t // chunk)
+    pad = nb * chunk - t
     gp = jnp.pad(g3, ((0, 0), (0, pad), (0, 0)))
     # pad ids with -1 (padded g rows are zero, so their matches contribute 0)
     ip = jnp.pad(ids2, ((0, 0), (0, pad)), constant_values=-1)
-    gc = gp.reshape(b, nb, _GRAM_CHUNK, d)
-    ic = ip.reshape(b, nb, _GRAM_CHUNK)
+    gc = gp.reshape(b, nb, chunk, d)
+    ic = ip.reshape(b, nb, chunk)
 
     def body(acc, blk):
         gblk, iblk = blk
@@ -224,44 +259,72 @@ def linear_norms_sq_blocked(
 
 def clipped_sum_linear(a: jax.Array, g: jax.Array, factors: jax.Array
                        ) -> jax.Array:
-    """sum_i c_i A_i^T G_i as one scaled contraction. factors: (B,)."""
-    a3, g3 = _as3d(a), _as3d(g)
-    gs = g3 * factors[:, None, None].astype(g3.dtype)
+    """sum_i c_i A_i^T G_i as one scaled contraction. factors: (B,).
+
+    f32 accumulation throughout (like every clipped sum here): quantizing
+    the clip factor to bf16 would let clipped contributions exceed the
+    sensitivity bound, and the Pallas clip_reduce kernel computes in f32 —
+    the reference must match it.
+    """
+    a3, g3 = _as3d(a).astype(ACC_DTYPE), _as3d(g).astype(ACC_DTYPE)
+    gs = g3 * factors[:, None, None].astype(ACC_DTYPE)
     return jnp.einsum("bti,bto->io", a3, gs)
+
+
+def fold_block_factors(a3: jax.Array, g3: jax.Array, factors: jax.Array,
+                       block_axis: str = "out"
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Fold per-block clip factors (B, M) into the blocked operand.
+
+    Returns (a3, g3) in f32 with the factor absorbed into the tensor whose
+    feature axis is blocked — shared by the jnp path below and the Pallas
+    backend (which then runs the big contraction with unit row factors).
+    The f32 fold keeps clip factors unquantized (sensitivity bound) and
+    matches the kernels' accumulation dtype.
+    """
+    a3 = a3.astype(ACC_DTYPE)
+    g3 = g3.astype(ACC_DTYPE)
+    b, t, din = a3.shape
+    dout = g3.shape[-1]
+    m = factors.shape[-1]
+    if block_axis == "out":
+        g3 = (g3.reshape(b, t, m, dout // m)
+              * factors[:, None, :, None].astype(ACC_DTYPE)
+              ).reshape(b, t, dout)
+    else:
+        a3 = (a3.reshape(b, t, m, din // m)
+              * factors[:, None, :, None].astype(ACC_DTYPE)
+              ).reshape(b, t, din)
+    return a3, g3
 
 
 def clipped_sum_linear_blocked(
     a: jax.Array, g: jax.Array, factors: jax.Array, *, block_axis: str = "out"
 ) -> jax.Array:
     """sum_i A_i^T diag-blocked(c_i) G_i; factors: (B, M) per block."""
-    a3, g3 = _as3d(a), _as3d(g)
-    b, t, din = a3.shape
-    dout = g3.shape[-1]
-    m = factors.shape[-1]
-    if block_axis == "out":
-        gs = (g3.reshape(b, t, m, dout // m)
-              * factors[:, None, :, None].astype(g3.dtype)).reshape(b, t, dout)
-        return jnp.einsum("bti,bto->io", a3, gs)
-    asb = (a3.reshape(b, t, m, din // m)
-           * factors[:, None, :, None].astype(a3.dtype)).reshape(b, t, din)
-    return jnp.einsum("bti,bto->io", asb, g3)
+    a3, g3 = fold_block_factors(_as3d(a), _as3d(g), factors, block_axis)
+    return jnp.einsum("bti,bto->io", a3, g3)
 
 
 def clipped_sum_bias(g: jax.Array, factors: jax.Array) -> jax.Array:
-    g3 = _as3d(g)
-    return jnp.einsum("bto,b->o", g3, factors.astype(g3.dtype))
+    # accumulate in f32: the B*T reduction and the clip factors must not
+    # quantize to bf16 or clipped contributions can exceed the sensitivity
+    # bound (callers cast the result back to the param dtype)
+    g3 = _as3d(g).astype(ACC_DTYPE)
+    return jnp.einsum("bto,b->o", g3, factors.astype(ACC_DTYPE))
 
 
 def clipped_sum_embed(ids: jax.Array, g: jax.Array, factors: jax.Array,
                       vocab: int) -> jax.Array:
     ids2 = ids.reshape(ids.shape[0], -1)
-    g3 = _as3d(g)
-    gs = (g3 * factors[:, None, None].astype(g3.dtype)).reshape(-1, g3.shape[-1])
+    g3 = _as3d(g).astype(ACC_DTYPE)  # f32 factors + accumulation, as above
+    gs = (g3 * factors[:, None, None].astype(ACC_DTYPE)
+          ).reshape(-1, g3.shape[-1])
     out = jnp.zeros((vocab, g3.shape[-1]), dtype=ACC_DTYPE)
-    return out.at[ids2.reshape(-1)].add(gs.astype(ACC_DTYPE))
+    return out.at[ids2.reshape(-1)].add(gs)
 
 
 def clipped_sum_scale(xhat: jax.Array, g: jax.Array, factors: jax.Array
                       ) -> jax.Array:
-    gx = _as3d(g * xhat)
-    return jnp.einsum("btd,b->d", gx, factors.astype(gx.dtype))
+    gx = _as3d(g * xhat).astype(ACC_DTYPE)  # f32 accumulation, as bias
+    return jnp.einsum("btd,b->d", gx, factors.astype(ACC_DTYPE))

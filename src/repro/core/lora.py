@@ -22,9 +22,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import ghost
-from repro.core.dp_layers import clip_factor
+from repro.core.ghost import clip_factor
 from repro.core.spec import P
+from repro.kernels import backend
 
 
 def lora_spec(d_in: int, d_out: int, rank: int, *, stack: tuple[int, ...] = (),
@@ -60,14 +60,15 @@ def _bwd(res, gy):
     # input cotangent (unclipped, through both paths)
     dx = gy @ w_frozen.T + ((gy * scale) @ b.T) @ a.T
     # per-example norms of the adapter pair's gradients
+    eng = backend.active()
     xa = x3 @ a  # (B, T, r)
     gbt = (g3 * scale) @ b.T  # (B, T, r)
-    n_b = ghost.linear_norms_sq(xa, g3 * scale)  # ||dB_i||²
-    n_a = ghost.linear_norms_sq(x3, gbt)  # ||dA_i||²
+    n_b = eng.linear_norms_sq(xa, g3 * scale)  # ||dB_i||²
+    n_a = eng.linear_norms_sq(x3, gbt)  # ||dA_i||²
     n = n_a + n_b
     f = clip_factor(c, n)
-    da = ghost.clipped_sum_linear(x3, gbt, f).astype(a.dtype)
-    db = ghost.clipped_sum_linear(xa, g3 * scale, f).astype(b.dtype)
+    da = eng.clipped_sum_linear(x3, gbt, f).astype(a.dtype)
+    db = eng.clipped_sum_linear(xa, g3 * scale, f).astype(b.dtype)
     dw = jnp.zeros_like(w_frozen)  # frozen
     return da, db, dw, dx, n, jnp.zeros_like(jnp.asarray(alpha, jnp.float32))
 

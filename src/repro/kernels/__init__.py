@@ -1,3 +1,17 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's fused per-layer clipping hot path,
+plus the backend engine that makes them load-bearing.
+
+  ghost_norm.py    per-example grad norms² (full + per-shard blocked)
+  clip_reduce.py   fused clip-scale-accumulate Σ_i c_i A_iᵀ G_i
+  fused_clip.py    norms² + clip + reduce in ONE pass over A, G
+  ref.py           pure-jnp oracles (the allclose ground truth)
+  ops.py           thin jitted wrappers for tests/benchmarks
+  backend.py       xla | pallas | auto engine registry + scoped config
+
+`repro.core.dp_layers` resolves every ghost op through `backend.active()`;
+import `backend` and use `backend.scoped("pallas")` (or
+`DPConfig(backend=...)`) to route training through the kernels.
+"""
+from repro.kernels import backend  # noqa: F401
+
+__all__ = ["backend"]

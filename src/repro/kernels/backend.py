@@ -1,0 +1,352 @@
+"""Ghost-op backend engine: pluggable dispatch for the fused-clipping ops.
+
+Every `custom_vjp` backward rule in `repro.core.dp_layers` (and the LoRA
+primitive in `repro.core.lora`) resolves its ghost ops through the engine
+returned by `active()` instead of calling `repro.core.ghost` directly. Three
+backends are registered:
+
+  xla     the pure-jnp reference paths of `repro.core.ghost` (gram /
+          gram_chunked / outer auto-dispatch). Always available; the
+          semantics oracle for the others.
+  pallas  real `pallas_call` kernels for the linear-layer hot paths
+          (kernels/ghost_norm.py, kernels/clip_reduce.py,
+          kernels/fused_clip.py). On TPU they compile to Mosaic; on CPU
+          they run in interpret mode (correctness validation — slow, tests
+          only). Ops with no kernel fall back to the xla implementations.
+  auto    per-op cost-model choice between the two, reusing
+          `gram_path_cost` / `outer_path_cost` plus a VMEM-footprint guard.
+          On non-TPU backends auto always resolves to xla.
+
+Backend selection matrix (op x backend), CPU behavior in parens:
+
+  op                        xla            pallas (CPU)          auto on TPU
+  ------------------------- -------------- --------------------- -----------------
+  linear_norms_sq           gram/outer     ghost_norm (interp)   cost model + VMEM
+  linear_norms_sq_blocked   einsum         ghost_norm_blocked    cost model + VMEM
+  clipped_sum_linear        einsum         clip_reduce (interp)  pallas if big T
+  clipped_sum_linear_blk    einsum         scale + clip_reduce   like unblocked
+  linear_clip (norm+clip)   composed       fused_norm_clip*      fused if VMEM fits
+  bias/embed/scale/vector   einsum/scatter = xla (no kernel)     = xla
+  clipped_sum_bias/embed/.. einsum/scatter = xla (no kernel)     = xla
+
+  (*) falls back to the two-kernel composition when 2·din·dout f32 exceeds
+      `vmem_limit_bytes`, or when `prefer_fused=False`. The fused kernel
+      emits norms AND the clipped sum from one pallas_call, which a
+      norms-only pass could not dead-code-eliminate — so the two-pass
+      drivers (ghost_flat/per_group pass 1, core/clipping.py) scope
+      `prefer_fused=False` around their norms-only backward.
+
+How `auto` chooses for a linear (B, T, din, dout):
+  1. outer path allowed (din·dout <= outer_max_elems) and cheaper by flops
+     -> xla outer path (one einsum, no kernel beats it);
+  2. else gram regime: T >= bt and the kernel's working set
+     (4·bt·dk + 2·bt²) f32 fits vmem_limit_bytes -> pallas gram kernel
+     (the (B,T,T) gram never touches HBM);
+  3. else -> xla gram/gram_chunked.
+
+Engine config is SCOPED, not global: `with backend.scoped("pallas"): ...`
+pushes an engine for the dynamic extent of the block, so jitted step
+functions capture their backend statically at trace time (this replaces the
+old `ghost.configure()` module-global mutation). Unspecified fields inherit
+from the enclosing scope, so e.g. the dry-run can widen `outer_max_elems`
+and a `make_dp_train_step(cfg)` inside still honors it.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ghost
+from repro.core.ghost import clip_factor
+from repro.kernels.clip_reduce import clip_reduce
+from repro.kernels.fused_clip import fused_norm_clip
+from repro.kernels.fused_clip import padded_dims as fused_clip_padded_dims
+from repro.kernels.ghost_norm import ghost_norm, ghost_norm_blocked
+
+__all__ = [
+    "EngineConfig", "Backend", "XlaBackend", "PallasBackend", "AutoBackend",
+    "register_backend", "backends", "make_engine", "active", "scoped",
+    "clip_factor", "choose_linear_path",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Static (trace-time) engine configuration."""
+
+    backend: str = "xla"
+    # xla path policy; None -> fall through to the repro.core.ghost module
+    # globals, so legacy ghost.configure() callers stay honored
+    outer_max_elems: int | None = None
+    gram_chunk: int | None = None
+    # pallas tile sizes
+    bt: int = 256   # sequence tile (ghost_norm / fused)
+    dk: int = 512   # feature-chunk tile (ghost_norm)
+    bi: int = 256   # clip_reduce din tile
+    bj: int = 256   # clip_reduce dout tile
+    # None -> interpret off TPU, compiled on TPU; bools force it
+    interpret: bool | None = None
+    # VMEM-footprint guard for kernel selection (bytes)
+    vmem_limit_bytes: int = 12 << 20
+    # False -> linear_clip composes norm + reduce ops instead of the fused
+    # kernel. Two-pass drivers (ghost_flat/per_group pass 1) scope this off:
+    # they only consume norms², and XLA can dead-code-eliminate the unused
+    # dW einsum of the composed path but never half of one pallas_call.
+    prefer_fused: bool = True
+
+
+_REGISTRY: dict[str, type["Backend"]] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: register a Backend under `name`."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+class Backend:
+    """The full ghost-op surface. Base implementations are the xla
+    reference paths; subclasses override the ops they accelerate."""
+
+    name = "base"
+
+    def __init__(self, config: EngineConfig):
+        self.config = config
+
+    def _interpret(self) -> bool:
+        if self.config.interpret is not None:
+            return self.config.interpret
+        return jax.default_backend() != "tpu"
+
+    # -- norms² ------------------------------------------------------------
+    def linear_norms_sq(self, a, g):
+        return ghost.linear_norms_sq(
+            a, g, outer_max_elems=self.config.outer_max_elems,
+            gram_chunk=self.config.gram_chunk)
+
+    def linear_norms_sq_blocked(self, a, g, num_blocks, *, block_axis="out"):
+        return ghost.linear_norms_sq_blocked(a, g, num_blocks,
+                                             block_axis=block_axis)
+
+    def bias_norms_sq(self, g):
+        return ghost.bias_norms_sq(g)
+
+    def embed_norms_sq(self, ids, g):
+        return ghost.embed_norms_sq(ids, g,
+                                    gram_chunk=self.config.gram_chunk)
+
+    def scale_norms_sq(self, xhat, g):
+        return ghost.scale_norms_sq(xhat, g)
+
+    def vector_norms_sq(self, per_example_grad):
+        return ghost.vector_norms_sq(per_example_grad)
+
+    # -- fused clipped sums ------------------------------------------------
+    def clipped_sum_linear(self, a, g, factors):
+        return ghost.clipped_sum_linear(a, g, factors)
+
+    def clipped_sum_linear_blocked(self, a, g, factors, *, block_axis="out"):
+        return ghost.clipped_sum_linear_blocked(a, g, factors,
+                                                block_axis=block_axis)
+
+    def clipped_sum_bias(self, g, factors):
+        return ghost.clipped_sum_bias(g, factors)
+
+    def clipped_sum_embed(self, ids, g, factors, vocab):
+        return ghost.clipped_sum_embed(ids, g, factors, vocab)
+
+    def clipped_sum_scale(self, xhat, g, factors):
+        return ghost.clipped_sum_scale(xhat, g, factors)
+
+    # -- fused norm + clip + reduce ---------------------------------------
+    def linear_clip(self, a, g, c, extra_norms_sq=None):
+        """One linear layer's whole backward clip:  (n_total, f, dW).
+
+        n_total includes `extra_norms_sq` (co-grouped params, e.g. bias);
+        f = clip_factor(c, n_total); dW = sum_i f_i A_iᵀ G_i. Backends may
+        fuse all three into one kernel.
+        """
+        n = self.linear_norms_sq(a, g)
+        if extra_norms_sq is not None:
+            n = n + extra_norms_sq
+        f = clip_factor(c, n)
+        return n, f, self.clipped_sum_linear(a, g, f)
+
+
+@register_backend("xla")
+class XlaBackend(Backend):
+    """Pure-jnp reference paths (repro.core.ghost) — the semantics oracle."""
+
+
+@register_backend("pallas")
+class PallasBackend(Backend):
+    """pallas_call kernels for the linear hot paths; xla fallbacks for the
+    cheap ops (bias/embed/scale/vector) that have no kernel."""
+
+    def _fused_fits(self, din: int, dout: int) -> bool:
+        dip, djp = fused_clip_padded_dims(din, dout)
+        bt = self.config.bt
+        need = 4 * (2 * dip * djp + 2 * bt * (dip + djp))
+        return need <= self.config.vmem_limit_bytes
+
+    def linear_norms_sq(self, a, g):
+        a3, g3 = ghost._as3d(a), ghost._as3d(g)
+        return ghost_norm(a3, g3, bt=self.config.bt, dk=self.config.dk,
+                          interpret=self._interpret())
+
+    def linear_norms_sq_blocked(self, a, g, num_blocks, *, block_axis="out"):
+        a3, g3 = ghost._as3d(a), ghost._as3d(g)
+        return ghost_norm_blocked(a3, g3, num_blocks, block_axis=block_axis,
+                                  bt=self.config.bt, dk=self.config.dk,
+                                  interpret=self._interpret())
+
+    def clipped_sum_linear(self, a, g, factors):
+        a3, g3 = ghost._as3d(a), ghost._as3d(g)
+        return clip_reduce(a3, g3, factors, bi=self.config.bi,
+                           bj=self.config.bj, bt=self.config.bt,
+                           interpret=self._interpret())
+
+    def clipped_sum_linear_blocked(self, a, g, factors, *, block_axis="out"):
+        # fold the per-block factors into the blocked operand (shared helper
+        # with the jnp path), then run the big contraction through the
+        # kernel with unit row factors
+        a3, g3 = ghost.fold_block_factors(ghost._as3d(a), ghost._as3d(g),
+                                          factors, block_axis)
+        ones = jnp.ones((a3.shape[0],), jnp.float32)
+        return clip_reduce(a3, g3, ones, bi=self.config.bi,
+                           bj=self.config.bj, bt=self.config.bt,
+                           interpret=self._interpret())
+
+    def linear_clip(self, a, g, c, extra_norms_sq=None):
+        a3, g3 = ghost._as3d(a), ghost._as3d(g)
+        din, dout = a3.shape[-1], g3.shape[-1]
+        if not self.config.prefer_fused or not self._fused_fits(din, dout):
+            return super().linear_clip(a3, g3, c, extra_norms_sq)
+        n_w, dw = fused_norm_clip(a3, g3, c, extra_norms_sq,
+                                  bt=self.config.bt,
+                                  interpret=self._interpret())
+        n = n_w if extra_norms_sq is None else n_w + extra_norms_sq
+        return n, clip_factor(c, n), dw
+
+
+def choose_linear_path(t: int, din: int, dout: int, config: EngineConfig,
+                       *, on_tpu: bool | None = None) -> str:
+    """The auto backend's decision for one linear ghost op: 'xla'|'pallas'.
+
+    Pure function of static shapes + config, exposed for tests and for the
+    benchmark sweep to report what auto WOULD pick.
+    """
+    if on_tpu is None:
+        on_tpu = jax.default_backend() == "tpu"
+    if not on_tpu and config.interpret is not True:
+        return "xla"  # interpret-mode kernels are validation-only
+    outer_cap = (ghost._OUTER_MAX_ELEMS if config.outer_max_elems is None
+                 else config.outer_max_elems)
+    outer_ok = din * dout <= outer_cap
+    if outer_ok and (ghost.outer_path_cost(t, din, dout)
+                     < ghost.gram_path_cost(t, din, dout)):
+        return "xla"  # one einsum, transient fits: nothing to fuse
+    if t < config.bt:
+        return "xla"  # sub-tile sequence: kernel grid degenerates
+    working_set = 4 * (4 * config.bt * config.dk + 2 * config.bt * config.bt)
+    if working_set > config.vmem_limit_bytes:
+        return "xla"
+    return "pallas"
+
+
+@register_backend("auto")
+class AutoBackend(Backend):
+    """Cost-model dispatch between the xla and pallas backends per op."""
+
+    def __init__(self, config: EngineConfig):
+        super().__init__(config)
+        self._xla = XlaBackend(config)
+        self._pallas = PallasBackend(config)
+
+    def _pick(self, a, g) -> Backend:
+        a3, g3 = ghost._as3d(a), ghost._as3d(g)
+        t, din, dout = a3.shape[1], a3.shape[-1], g3.shape[-1]
+        choice = choose_linear_path(t, din, dout, self.config)
+        return self._pallas if choice == "pallas" else self._xla
+
+    def linear_norms_sq(self, a, g):
+        return self._pick(a, g).linear_norms_sq(a, g)
+
+    def linear_norms_sq_blocked(self, a, g, num_blocks, *, block_axis="out"):
+        return self._pick(a, g).linear_norms_sq_blocked(
+            a, g, num_blocks, block_axis=block_axis)
+
+    def clipped_sum_linear(self, a, g, factors):
+        return self._pick(a, g).clipped_sum_linear(a, g, factors)
+
+    def clipped_sum_linear_blocked(self, a, g, factors, *, block_axis="out"):
+        return self._pick(a, g).clipped_sum_linear_blocked(
+            a, g, factors, block_axis=block_axis)
+
+    def linear_clip(self, a, g, c, extra_norms_sq=None):
+        return self._pick(a, g).linear_clip(a, g, c, extra_norms_sq)
+
+
+# ---------------------------------------------------------------------------
+# Scoped engine resolution.
+# ---------------------------------------------------------------------------
+
+_DEFAULT: Backend | None = None
+# context-local, not a process-global list: concurrent tracers (threads /
+# async tasks) each see their own scope stack and cannot cross-contaminate
+_STACK: contextvars.ContextVar[tuple[Backend, ...]] = contextvars.ContextVar(
+    "ghost_backend_stack", default=())
+
+
+def make_engine(backend: str | None = None, **overrides) -> Backend:
+    """Build an engine; unspecified fields inherit from the active scope."""
+    base = active().config
+    cfg = dataclasses.replace(
+        base, backend=base.backend if backend is None else backend,
+        **overrides)
+    try:
+        cls = _REGISTRY[cfg.backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown ghost backend {cfg.backend!r}; "
+            f"registered: {backends()}") from None
+    return cls(cfg)
+
+
+def active() -> Backend:
+    """The engine in effect (innermost `scoped`, else the xla default)."""
+    stack = _STACK.get()
+    if stack:
+        return stack[-1]
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = XlaBackend(EngineConfig())
+    return _DEFAULT
+
+
+@contextlib.contextmanager
+def scoped(backend: str | None = None, **overrides):
+    """Push an engine for the dynamic extent of the block.
+
+    Trace jitted functions inside the block and they capture the engine
+    statically; nesting composes (inner scopes inherit unspecified fields).
+    """
+    eng = make_engine(backend, **overrides)
+    token = _STACK.set(_STACK.get() + (eng,))
+    try:
+        yield eng
+    finally:
+        _STACK.reset(token)

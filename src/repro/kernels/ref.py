@@ -20,3 +20,30 @@ def clip_reduce_ref(a: jnp.ndarray, g: jnp.ndarray,
     """sum_i c_i A_iᵀ G_i. a: (B, T, din); g: (B, T, dout); factors: (B,)."""
     a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
     return jnp.einsum("bti,bto->io", a32, g32 * factors[:, None, None])
+
+
+def ghost_norm_blocked_ref(a: jnp.ndarray, g: jnp.ndarray, num_blocks: int,
+                           block_axis: str = "out") -> jnp.ndarray:
+    """(B, M) per-block squared norms via direct per-block evaluation."""
+    a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
+    b, t, din = a32.shape
+    dout = g32.shape[-1]
+    m = num_blocks
+    if block_axis == "out":
+        gb = g32.reshape(b, t, m, dout // m)
+        pg = jnp.einsum("bti,btmo->bmio", a32, gb)  # per-block grads
+    else:
+        ab = a32.reshape(b, t, m, din // m)
+        pg = jnp.einsum("btmi,bto->bmio", ab, g32)
+    return jnp.sum(pg * pg, axis=(2, 3))
+
+
+def fused_norm_clip_ref(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,
+                        extra_norms_sq: jnp.ndarray | None = None):
+    """(norms_sq (B,), clipped summed grad) with the shared encoded-threshold
+    factor (c > 0 clip, +inf pass, negative direct-scale)."""
+    from repro.core.ghost import clip_factor
+    n = ghost_norm_ref(a, g)
+    total = n if extra_norms_sq is None else n + extra_norms_sq
+    f = clip_factor(c, total)
+    return n, clip_reduce_ref(a, g, f)

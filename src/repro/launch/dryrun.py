@@ -72,6 +72,14 @@ _DTYPE_BYTES = {
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
 
+def _mesh_context(mesh):
+    """`jax.set_mesh(mesh)` on new jax; on <=0.4 the Mesh IS the context."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def _shape_bytes(shape_str: str) -> int:
     """Bytes of one HLO shape like 'f32[16,128]' (tuples handled upstream)."""
     m = _SHAPE_RE.match(shape_str)
@@ -142,10 +150,12 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     from repro.launch.mesh import data_axes
     if clipping == "per_shard_resolved":
         clipping = "per_layer"
+    # backend="xla": dry-run lowering must stay on the reference paths (a
+    # TPU pallas custom-call cannot lower on the CPU backend used here).
     dpc = DPConfig(mode=clipping, sigma=1.0, sampling_rate=1e-3,
                    steps=1000, adaptive=True, init_threshold=1.0,
                    microbatches=microbatches,
-                   batch_axes=data_axes(mesh))
+                   batch_axes=data_axes(mesh), backend="xla")
     init_fn, step_fn, plan = make_dp_train_step(
         model.loss_fn, getattr(model, "dp_spec", model.spec), model.layout,
         optim.adam(1e-4), dpc, batch_size=shape.global_batch,
@@ -170,7 +180,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
         out_shardings=(pshard, oshard, dshard, None),
         donate_argnums=(0, 1, 2),  # params/opt/dp buffers update in place
     )
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         lowered = jitted.lower(params_abs, opt_abs, dp_abs, batch_abs,
                                key_abs)
     return lowered, model, cfg
@@ -203,7 +213,7 @@ def build_serve_lowering(arch: str, shape_name: str, mesh, *,
         bshard = batch_shardings(batch_abs, mesh)
         jitted = jax.jit(model.prefill_step,
                          in_shardings=(pshard, bshard), out_shardings=None)
-        with jax.set_mesh(mesh):
+        with _mesh_context(mesh):
             lowered = jitted.lower(params_abs, batch_abs)
         return lowered, model, cfg
 
@@ -215,7 +225,7 @@ def build_serve_lowering(arch: str, shape_name: str, mesh, *,
                      in_shardings=(pshard, cshard, bshard),
                      out_shardings=(None, cshard),
                      donate_argnums=(1,))  # KV/state cache updates in place
-    with jax.set_mesh(mesh):
+    with _mesh_context(mesh):
         lowered = jitted.lower(params_abs, cache_abs, batch_abs)
     return lowered, model, cfg
 
@@ -247,10 +257,16 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     kind = shape.kind  # train | prefill | decode
-    prev_ghost = None
+    from contextlib import ExitStack
+
+    from repro.kernels import backend as _backend
+    # scoped engine config (not a module-global mutation): the step trace
+    # inside build_*_lowering inherits the widened outer cap — see the
+    # sharding note in repro.core.ghost.
+    eng_scope = ExitStack()
     if ghost_outer_cap is not None:
-        from repro.core import ghost as _ghost
-        prev_ghost = _ghost.configure(outer_max_elems=ghost_outer_cap)
+        eng_scope.enter_context(
+            _backend.scoped(outer_max_elems=ghost_outer_cap))
     try:
         if kind == "train":
             mb = microbatches if microbatches is not None else (2 if debug else 8)
@@ -273,6 +289,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                       "alias_size_in_bytes"):
                 mem_d[f] = int(getattr(mem, f, 0) or 0)
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):  # jax<=0.4 returns [dict]
+            cost = cost[0] if cost else {}
         cost_d = {k: float(v) for k, v in cost.items()
                   if isinstance(v, (int, float)) and k in
                   ("flops", "bytes accessed", "transcendentals")}
@@ -306,9 +324,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                   "error": f"{type(e).__name__}: {e}",
                   "traceback": traceback.format_exc()[-4000:]}
     finally:
-        if prev_ghost is not None:
-            from repro.core import ghost as _ghost
-            _ghost.configure(**prev_ghost)
+        eng_scope.close()
     if tag:
         result["tag"] = tag
     if save:

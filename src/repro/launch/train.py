@@ -50,6 +50,7 @@ def build_everything(args):
         quantile_budget_fraction=args.quantile_budget,
         noise_strategy=args.noise_strategy,
         microbatches=args.microbatches,
+        backend=args.backend,
     )
     sched = optim.linear_decay(args.lr, args.steps, warmup_steps=args.steps // 20)
     if args.optimizer == "adam":
@@ -88,6 +89,12 @@ def main():
     ap.add_argument("--quantile", type=float, default=0.5)
     ap.add_argument("--quantile-budget", type=float, default=0.01)
     ap.add_argument("--noise-strategy", default="global")
+    ap.add_argument("--backend", default="auto",
+                    choices=["xla", "pallas", "auto"],
+                    help="ghost-op engine (repro.kernels.backend): xla "
+                         "reference paths, pallas kernels (interpret mode "
+                         "off-TPU — slow, validation only), or auto "
+                         "cost-model dispatch")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
@@ -101,6 +108,7 @@ def main():
 
     print(f"# arch={cfg.name} params={model.num_params:,} "
           f"groups={model.layout.num_groups} mode={plan.config.mode} "
+          f"backend={plan.config.backend} "
           f"sigma={plan.sigma:.3f} sigma_new={plan.sigma_new:.3f} "
           f"sigma_b={plan.sigma_b:.3f}")
     t_start = time.time()

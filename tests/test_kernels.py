@@ -3,11 +3,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis; deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.kernels import ref
 from repro.kernels.clip_reduce import clip_reduce
-from repro.kernels.ghost_norm import ghost_norm
+from repro.kernels.fused_clip import fused_norm_clip
+from repro.kernels.ghost_norm import ghost_norm, ghost_norm_blocked
 
 SHAPES = [
     (2, 8, 16, 24),
@@ -69,3 +73,70 @@ def test_kernel_block_shape_sweep():
         for dk in (32, 128):
             got = ghost_norm(a, g, bt=bt, dk=dk)
             np.testing.assert_allclose(got, want, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Blocked ghost-norm kernel (per-shard clipping hot path).
+# ---------------------------------------------------------------------------
+
+BLOCKED_CASES = [
+    # (B, T, din, dout, M, axis) — T not a multiple of bt, narrow blocks
+    (2, 8, 16, 24, 4, "out"),
+    (3, 70, 48, 40, 4, "out"),
+    (3, 70, 48, 40, 6, "in"),
+    (1, 130, 36, 128, 2, "out"),
+]
+
+
+@pytest.mark.parametrize("case", BLOCKED_CASES)
+def test_ghost_norm_blocked_kernel(case):
+    b, t, din, dout, m, axis = case
+    # crc32, not hash(): case contains strings and str hashes are salted
+    # per process — a CI failure must be reproducible locally
+    import zlib
+    key = jax.random.PRNGKey(zlib.crc32(repr(case).encode()) & 0xFFFF)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.1
+    got = ghost_norm_blocked(a, g, m, block_axis=axis, bt=32, dk=32)
+    want = ref.ghost_norm_blocked_ref(a, g, m, block_axis=axis)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    # per-block norms² must sum to the full-layer norm²
+    np.testing.assert_allclose(jnp.sum(got, -1), ref.ghost_norm_ref(a, g),
+                               rtol=1e-4)
+
+
+def test_ghost_norm_blocked_bad_args():
+    a = jnp.zeros((2, 8, 6))
+    g = jnp.zeros((2, 8, 10))
+    with pytest.raises(ValueError):
+        ghost_norm_blocked(a, g, 3, block_axis="out")  # 10 % 3 != 0
+    with pytest.raises(ValueError):
+        ghost_norm_blocked(a, g, 2, block_axis="diag")
+
+
+# ---------------------------------------------------------------------------
+# Fused norm+clip kernel (one HBM pass over A, G).
+# ---------------------------------------------------------------------------
+
+FUSED_CASES = [
+    (2, 8, 16, 24),
+    (3, 70, 48, 40),    # ragged: T % bt != 0, din < dk
+    (1, 130, 36, 140),  # dout > one 128 lane tile
+]
+
+
+@pytest.mark.parametrize("case", FUSED_CASES)
+@pytest.mark.parametrize("with_extra", [False, True])
+def test_fused_norm_clip_kernel(case, with_extra):
+    b, t, din, dout = case
+    key = jax.random.PRNGKey(hash(case) & 0xFFF)
+    a = jax.random.normal(key, (b, t, din))
+    g = jax.random.normal(jax.random.fold_in(key, 1), (b, t, dout)) * 0.1
+    extra = (jax.random.uniform(jax.random.fold_in(key, 2), (b,))
+             if with_extra else None)
+    # exercise the whole threshold encoding: clip, pass-through, direct scale
+    c = jnp.array(([0.5, jnp.inf, -0.7, 0.01] * b)[:b])
+    got_n, got_dw = fused_norm_clip(a, g, c, extra, bt=32)
+    want_n, want_dw = ref.fused_norm_clip_ref(a, g, c, extra)
+    np.testing.assert_allclose(got_n, want_n, rtol=1e-4)
+    np.testing.assert_allclose(got_dw, want_dw, rtol=1e-4, atol=1e-5)

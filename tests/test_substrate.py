@@ -4,7 +4,10 @@ import tempfile
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis; deterministic shim
+    from _hypothesis_compat import given, settings, st
 
 from repro import optim
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
