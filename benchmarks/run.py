@@ -11,13 +11,44 @@ Mapping to the paper:
   kernel_*     ghost-norm op microbenches (Sec 3.1 fused op)
   roofline_*   EXPERIMENTS.md §Roofline (from the multi-pod dry-run)
 
+Every suite that persists measurements writes a ``BENCH_*.json`` artifact
+next to this file; after the suites run, ``aggregate()`` folds them all
+into ``BENCH_summary.json`` so the perf trajectory across PRs is
+machine-readable from ONE file (``--aggregate-only`` refreshes it without
+re-benchmarking).
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--full] [--only PREFIX]
+                                              [--aggregate-only]
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
 import time
+
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+_SUMMARY_PATH = os.path.join(_BENCH_DIR, "BENCH_summary.json")
+
+
+def aggregate() -> str:
+    """Fold every BENCH_*.json artifact into BENCH_summary.json."""
+    artifacts = {}
+    for path in sorted(glob.glob(os.path.join(_BENCH_DIR, "BENCH_*.json"))):
+        name = os.path.basename(path)
+        if name == os.path.basename(_SUMMARY_PATH):
+            continue
+        try:
+            with open(path) as fh:
+                artifacts[name] = json.load(fh)
+        except (OSError, ValueError) as e:
+            artifacts[name] = {"error": f"{type(e).__name__}: {e}"}
+    summary = {"unix_time": int(time.time()), "artifacts": artifacts}
+    with open(_SUMMARY_PATH, "w") as fh:
+        json.dump(summary, fh, indent=1)
+    return _SUMMARY_PATH
 
 
 def main() -> None:
@@ -26,8 +57,14 @@ def main() -> None:
                     help="full-size benches (slower)")
     ap.add_argument("--only", default=None,
                     help="run only benches whose module name contains this")
+    ap.add_argument("--aggregate-only", action="store_true",
+                    help="just rebuild BENCH_summary.json from existing "
+                         "BENCH_*.json artifacts")
     args = ap.parse_args()
     quick = not args.full
+    if args.aggregate_only:
+        print(f"# wrote {aggregate()}", file=sys.stderr)
+        return
 
     from benchmarks import (bench_epochs, bench_kernels, bench_quantile,
                             bench_scaling, bench_throughput, bench_utility,
@@ -55,6 +92,7 @@ def main() -> None:
             print(f"{name}_SUITE_ERROR,0,{type(e).__name__}:{e}",
                   flush=True)
         print(f"# suite {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    print(f"# wrote {aggregate()}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Perf smoke: the Figure-1 throughput bench on the tiny config, covering
+# BOTH executions of the flat/group clipping modes (bk vs twopass).
+# Writes benchmarks/BENCH_throughput.json and refreshes the cross-PR
+# aggregate benchmarks/BENCH_summary.json.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python -m benchmarks.bench_throughput
+python -m benchmarks.run --aggregate-only

@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# CI: tier-1 tests + the perf smoke in one command.
+set -euo pipefail
+cd "$(dirname "$0")"
+./test.sh
+./bench_smoke.sh

@@ -1,4 +1,4 @@
-"""Clipping-mode drivers: one mechanism, five modes.
+"""Clipping-mode drivers: one mechanism, five modes, two executions.
 
 Every model exposes   loss_fn(params, batch, thresholds) -> (B,) per-example
 losses, where `thresholds` is the GroupLayout dict of encoded per-example
@@ -10,17 +10,30 @@ that into (clipped summed grads, per-example norms², clip counts):
                 layer's custom bwd clips with its own C_k the moment the
                 cotangent reaches it; norms² come back through the
                 threshold cotangents for the quantile update.
-  ghost_flat  : flat clipping via two passes (Li et al. 2022b ghost
-                clipping — the paper's honest efficiency baseline): pass 1
-                reads norms² only (weight contractions dead-code-eliminated),
-                pass 2 applies the per-example factor via direct-scale
-                thresholds.
-  per_group   : arbitrary partition of layout groups (per-device clipping:
-                partition = pipeline stages / model shards). Two passes;
-                pass 1 norms are segment-summed per supergroup.
+  ghost_flat  : flat (ghost) clipping, Li et al. 2022b — the paper's honest
+                efficiency baseline. Default execution is BOOK-KEEPING
+                (`bk`, Bu et al. 2022 / repro.core.bk): ONE backward pass
+                that reads norms² AND caches each layer's ghost residuals,
+                then a scale-and-contract epilogue builds the clipped sums
+                from the cache once the flat factor is known.
+  per_group   : arbitrary partition of layout groups (per-device clipping —
+                the paper's Sec 4 GPT-3 recipe: partition = pipeline stages
+                / model shards). Same BK execution; pass-1 norms are
+                segment-summed per supergroup before the epilogue.
   naive_flat  : Opacus-style oracle — materializes per-example grads with
                 jacrev, clips, sums. O(B x params) memory; used as the
                 correctness oracle and the Figure-1 "usual flat" baseline.
+
+Executions for the flat/group modes (`execution=` kwarg, also reachable as
+explicit `ghost_flat_twopass` / `per_group_twopass` reference modes):
+
+  bk      : one backprop + epilogue (above). Falls back to twopass
+            automatically when the layout cannot be captured (a threshold
+            leaf consumed at >1 call sites, shared-site params with
+            sensitivity_mult > 1 — see bk.probe_recipes).
+  twopass : the historical reference — pass 1 reads norms² only (weight
+            contractions dead-code-eliminated), pass 2 applies the
+            per-example factor via direct-scale thresholds.
 
 per_shard is expressed through the layout itself (blocked groups, see
 core.spec / dp_linear_blocked) and then driven as per_layer — each block is
@@ -33,10 +46,19 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.spec import GroupLayout
+from repro.core import bk
+from repro.core.spec import GroupLayout, P
 from repro.kernels import backend
 
-MODES = ("non_private", "per_layer", "ghost_flat", "per_group", "naive_flat")
+MODES = ("non_private", "per_layer", "ghost_flat", "per_group", "naive_flat",
+         "ghost_flat_twopass", "per_group_twopass")
+EXECUTIONS = ("bk", "twopass")
+
+
+def base_mode(mode: str) -> str:
+    """Strip the `_twopass` reference-execution suffix off a mode name."""
+    suffix = "_twopass"
+    return mode[: -len(suffix)] if mode.endswith(suffix) else mode
 
 LossFn = Callable[[Any, Any, dict], jax.Array]  # (params, batch, thresholds) -> (B,)
 
@@ -100,6 +122,62 @@ def group_clip_factors(norms_sq_groups: jax.Array, c: jax.Array) -> jax.Array:
     return jnp.minimum(1.0, c[:, None] / norm)
 
 
+def _bk_capture_ok(layout: GroupLayout, trainable_key: str | None) -> bool:
+    """BK's epilogue rebuilds grads by walking the layout's spec, so the
+    spec must cover exactly the trainable tree (it does for both the full-
+    params case and the DP-LoRA {'lora': ...} sub-spec)."""
+    return trainable_key is None or set(layout._spec) == {trainable_key}
+
+
+def _norms_pass(loss_fn, params, batch, layout, batch_size, inf_tree,
+                trainable_key, execution):
+    """The shared first stage of ghost_flat / per_group: one backward pass
+    for (sum loss, (K, B) norms²), capturing BK residuals when possible.
+
+    Returns (val, norms, cap) with cap = (residuals, recipes) under BK or
+    None when running (or falling back to) the twopass reference."""
+    cap = (bk.capture_clipped(loss_fn, params, batch, layout, batch_size)
+           if execution == "bk" and _bk_capture_ok(layout, trainable_key)
+           else None)
+    if cap is not None:
+        val, norms, residuals, recipes = cap
+        return val, norms, (residuals, recipes)
+    val, norm_tree = _norms_only(loss_fn, params, batch, inf_tree)
+    return val, layout.unpack(norm_tree), None
+
+
+def _naive_group_norms(layout: GroupLayout, jac: Any, batch_size: int
+                       ) -> jax.Array:
+    """(K, B) per-layout-group norms² from materialized per-example grads.
+
+    Gives the naive_flat oracle the same norms surface as every other mode
+    (stacked leaves contribute one row per stack element, blocked leaves
+    one row per column/row block), so group-wise parity tests can compare
+    against it directly."""
+    norms = jnp.zeros((layout.num_groups, batch_size), jnp.float32)
+
+    def walk(node, j, path):
+        nonlocal norms
+        if isinstance(node, P):
+            grp = layout.group(layout._leaf_group[path])
+            x = j.astype(jnp.float32)  # (B,) + node.shape
+            if node.blocks > 1:
+                m = node.blocks
+                x = x.reshape(x.shape[:-1] + (m, x.shape[-1] // m))
+                x = jnp.moveaxis(x, -2, 1 + node.stack)  # blocks after stack
+            sq = jnp.sum(
+                x.reshape((batch_size,) + grp.stack_shape + (-1,)) ** 2,
+                axis=-1)
+            rows = sq.reshape(batch_size, grp.count).T  # (count, B)
+            norms = norms.at[grp.offset: grp.offset + grp.count].add(rows)
+            return
+        for k in node:
+            walk(node[k], j[k], path + (k,))
+
+    walk(layout._spec, jac, ())
+    return norms
+
+
 def dp_clipped_gradients(
     loss_fn: LossFn,
     params: Any,
@@ -115,10 +193,15 @@ def dp_clipped_gradients(
     trainable_key: str | None = None,  # top-level params subtree to train
     #   (DP LoRA: params = {'base': frozen, 'lora': adapters},
     #    trainable_key='lora'; grads come back as {'lora': ...})
+    execution: str = "bk",  # bk | twopass, for ghost_flat / per_group
 ) -> ClipResult:
     """Clipped summed gradients + norms under the requested mode."""
     if mode not in MODES:
         raise ValueError(f"mode {mode!r} not in {MODES}")
+    if execution not in EXECUTIONS:
+        raise ValueError(f"execution {execution!r} not in {EXECUTIONS}")
+    if mode.endswith("_twopass"):
+        mode, execution = base_mode(mode), "twopass"
     inf_tree = layout.pack_value(jnp.inf, batch_size)
 
     if mode == "non_private":
@@ -137,29 +220,42 @@ def dp_clipped_gradients(
         return ClipResult(grads, norms, val / batch_size)
 
     if mode == "ghost_flat":
-        val, norm_tree = _norms_only(loss_fn, params, batch, inf_tree)
-        norms = layout.unpack(norm_tree)  # (K, B)
+        val, norms, cap = _norms_pass(loss_fn, params, batch, layout,
+                                      batch_size, inf_tree, trainable_key,
+                                      execution)
         total = jnp.sum(norms, axis=0)  # (B,)
         c = jnp.asarray(flat_threshold, jnp.float32)
         f = jnp.minimum(1.0, c / jnp.sqrt(total + 1e-12))  # (B,)
-        scale_tree = layout.pack_value(-f, batch_size)
-        _, grads = _grads_only(loss_fn, params, batch, scale_tree,
-                               trainable_key)
+        if cap is not None:  # BK epilogue: contract the cached residuals
+            residuals, recipes = cap
+            f_rows = jnp.broadcast_to(f[None], (layout.num_groups,
+                                                batch_size))
+            grads = bk.contract_clipped(layout, recipes, residuals, f_rows)
+        else:  # twopass reference (or BK fallback): second backward pass
+            scale_tree = layout.pack_value(-f, batch_size)
+            _, grads = _grads_only(loss_fn, params, batch, scale_tree,
+                                   trainable_key)
         return ClipResult(grads, norms, val / batch_size)
 
     if mode == "per_group":
         if group_assignment is None or group_thresholds is None:
             raise ValueError("per_group mode needs group_assignment + group_thresholds")
-        val, norm_tree = _norms_only(loss_fn, params, batch, inf_tree)
-        norms = layout.unpack(norm_tree)  # (K, B)
+        val, norms, cap = _norms_pass(loss_fn, params, batch, layout,
+                                      batch_size, inf_tree, trainable_key,
+                                      execution)
         num_super = group_thresholds.shape[0]
         super_norms = jax.ops.segment_sum(
             norms, group_assignment, num_segments=num_super)  # (G, B)
         f_super = group_clip_factors(super_norms, group_thresholds)  # (G, B)
         f_per_layer = f_super[group_assignment]  # (K, B)
-        scale_tree = layout.pack_rows(-f_per_layer)
-        _, grads = _grads_only(loss_fn, params, batch, scale_tree,
-                               trainable_key)
+        if cap is not None:
+            residuals, recipes = cap
+            grads = bk.contract_clipped(layout, recipes, residuals,
+                                        f_per_layer)
+        else:
+            scale_tree = layout.pack_rows(-f_per_layer)
+            _, grads = _grads_only(loss_fn, params, batch, scale_tree,
+                                   trainable_key)
         return ClipResult(grads, norms, val / batch_size)
 
     # naive_flat: the Opacus-style materializing oracle.
@@ -177,11 +273,10 @@ def dp_clipped_gradients(
 
         def per_example_losses(p):
             return loss_fn(p, batch, inf_tree)
-    sq = [
-        jnp.sum(jnp.square(l.astype(jnp.float32).reshape(batch_size, -1)), axis=-1)
-        for l in jax.tree_util.tree_leaves(jac)
-    ]
-    total = jnp.sum(jnp.stack(sq, 0), axis=0)  # (B,)
+    # real per-layout-group norms² (stacked/blocked aware) so group-wise
+    # parity tests can compare every mode against this oracle
+    norms = _naive_group_norms(layout, jac, batch_size)
+    total = jnp.sum(norms, axis=0)  # (B,)
     c = jnp.asarray(flat_threshold, jnp.float32)
     f = jnp.minimum(1.0, c / jnp.sqrt(total + 1e-12))
     grads = jax.tree_util.tree_map(
@@ -190,10 +285,5 @@ def dp_clipped_gradients(
                                 axes=1).reshape(l.shape[1:]).astype(l.dtype),
         jac,
     )
-    # report per-layout-group norms for parity with other modes: not cheaply
-    # available here (param-leaf granularity != group granularity); return
-    # the flat total in row 0 and zeros elsewhere.
-    norms = jnp.zeros((layout.num_groups, batch_size), jnp.float32)
-    norms = norms.at[0].set(total)
     loss = jnp.mean(per_example_losses(params))
     return ClipResult(grads, norms, loss)

@@ -29,6 +29,15 @@ Every ghost op below resolves through the backend engine
 (`repro.kernels.backend.active()`) at trace time — `xla` reference paths,
 `pallas` kernels, or `auto` cost-model dispatch. Select with
 `backend.scoped(...)` (done by `make_dp_train_step` from `DPConfig.backend`).
+
+Book-keeping capture (repro.core.bk): when the threshold argument arrives
+as a `bk.BkChannel` (only inside `backend.scoped(capture_residuals=True)`,
+driven by `bk.capture_clipped`), the backward rule emits per-example norms²
+through the threshold cotangent as usual but, instead of contracting the
+clipped weight gradient, stashes the ghost residuals (activations + output
+cotangents) through the channel's sink cotangent. Parameter cotangents are
+ZERO in that mode — the BK epilogue (`bk.contract_clipped`) owns them; the
+input cotangent stays the real one so backprop continues downstream.
 """
 from __future__ import annotations
 
@@ -38,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import bk
 from repro.core.ghost import clip_factor  # noqa: F401  (re-export, public API)
 from repro.kernels import backend
 
@@ -54,6 +64,7 @@ def _int_zero_cotangent(x):
 @jax.custom_vjp
 def dp_linear(w: jax.Array, b: jax.Array | None, x: jax.Array, c: jax.Array
               ) -> jax.Array:
+    bk.record_linear(c, w, b, x)
     y = x @ w
     if b is not None:
         y = y + b
@@ -73,6 +84,13 @@ def _dp_linear_bwd(res, gy):
     a3 = x.reshape(bsz, -1, x.shape[-1])
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
     extra = eng.bias_norms_sq(g3) if has_bias else None
+    if isinstance(c, bk.BkChannel):  # BK capture: norms + residual stash
+        n = eng.linear_norms_sq(a3, g3)
+        if has_bias:
+            n = n + extra
+        dc = bk.emit(c, n, a=a3, g=g3)
+        db = jnp.zeros_like(b) if has_bias else None
+        return jnp.zeros_like(w), db, dx, dc
     n, f, dw = eng.linear_clip(a3, g3, c, extra)
     dw = dw.astype(w.dtype)
     db = eng.clipped_sum_bias(g3, f).astype(w.dtype) if has_bias else None
@@ -97,6 +115,7 @@ def dp_linear_blocked(w, b, x, c, block_axis: str = "out"):
     and clip factor are computed from shard-local data only, so no norm
     all-reduce appears in the partitioned HLO.
     """
+    bk.record_linear_blocked(c, w, b, x, block_axis)
     y = x @ w
     if b is not None:
         y = y + b
@@ -115,7 +134,7 @@ def _dp_linear_blocked_bwd(block_axis, res, gy):
     bsz = x.shape[0]
     a3 = x.reshape(bsz, -1, x.shape[-1])
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
-    m = c.shape[-1]
+    m = bk.thresholds_of(c).shape[-1]
     n = eng.linear_norms_sq_blocked(a3, g3, m, block_axis=block_axis)
     if has_bias:
         # bias columns live with the 'out' blocks; for 'in' blocking the bias
@@ -127,6 +146,10 @@ def _dp_linear_blocked_bwd(block_axis, res, gy):
             n = n + jnp.sum(sb.astype(jnp.float32) ** 2, axis=-1)
         else:
             n = n.at[:, 0].add(eng.bias_norms_sq(g3))
+    if isinstance(c, bk.BkChannel):
+        dc = bk.emit(c, n, a=a3, g=g3)
+        db = jnp.zeros_like(b) if has_bias else None
+        return jnp.zeros_like(w), db, dx, dc
     f = clip_factor(c, n)  # (B, M)
     dw = eng.clipped_sum_linear_blocked(a3, g3, f, block_axis=block_axis
                                         ).astype(w.dtype)
@@ -152,6 +175,7 @@ dp_linear_blocked.defvjp(_dp_linear_blocked_fwd, _dp_linear_blocked_bwd)
 
 @jax.custom_vjp
 def dp_embed(table: jax.Array, ids: jax.Array, c: jax.Array) -> jax.Array:
+    bk.record_embed(c, table, ids)
     return jnp.take(table, ids, axis=0)
 
 
@@ -169,6 +193,11 @@ def _dp_embed_bwd(res, gy):
     ids2 = ids.reshape(bsz, -1)
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
     n = eng.embed_norms_sq(ids2, g3)
+    if isinstance(c, bk.BkChannel):
+        # token ids ride the float sink channel (exact below 2^24)
+        dc = bk.emit(c, n, g=g3, ids=ids2.astype(jnp.float32))
+        return (jnp.zeros((vocab, g3.shape[-1]), dtype),
+                _int_zero_cotangent(ids), dc)
     f = clip_factor(c, n)
     dtable = eng.clipped_sum_embed(ids2, g3, f, vocab).astype(dtype)
     return dtable, _int_zero_cotangent(ids), n
@@ -184,6 +213,7 @@ dp_embed.defvjp(_dp_embed_fwd, _dp_embed_bwd)
 
 @jax.custom_vjp
 def dp_scale(s: jax.Array, xhat: jax.Array, c: jax.Array) -> jax.Array:
+    bk.record_scale(c, s, xhat)
     return xhat * s
 
 
@@ -196,6 +226,11 @@ def _dp_scale_bwd(res, gy):
     eng = backend.active()
     dxhat = gy * s
     n = eng.scale_norms_sq(xhat, gy)
+    if isinstance(c, bk.BkChannel):
+        # the per-example grad itself is small ((B, d)): stash it directly
+        pg = jnp.sum((gy * xhat).reshape(gy.shape[0], -1, gy.shape[-1])
+                     .astype(jnp.float32), axis=1)
+        return jnp.zeros_like(s), dxhat, bk.emit(c, n, pg=pg)
     f = clip_factor(c, n)
     ds = eng.clipped_sum_scale(xhat, gy, f).astype(s.dtype)
     return ds, dxhat, n
@@ -206,6 +241,7 @@ dp_scale.defvjp(_dp_scale_fwd, _dp_scale_bwd)
 
 @jax.custom_vjp
 def dp_shift(b: jax.Array, x: jax.Array, c: jax.Array) -> jax.Array:
+    bk.record_shift(c, x)
     return x + b
 
 
@@ -221,6 +257,10 @@ def _dp_shift_bwd(res, gy):
     bsz = gy.shape[0]
     g3 = gy.reshape(bsz, -1, gy.shape[-1])
     n = eng.bias_norms_sq(g3)
+    if isinstance(c, bk.BkChannel):
+        pg = jnp.sum(g3.astype(jnp.float32), axis=1)  # (B, d) per-ex grad
+        return (jnp.zeros((g3.shape[-1],), dtype), gy,
+                bk.emit(c, n, pg=pg))
     f = clip_factor(c, n)
     db = eng.clipped_sum_bias(g3, f).astype(dtype)
     return db, gy, n
@@ -238,7 +278,8 @@ dp_shift.defvjp(_dp_shift_fwd, _dp_shift_bwd)
 
 @jax.custom_vjp
 def dp_broadcast(p: jax.Array, c: jax.Array) -> jax.Array:
-    bsz = c.shape[0]
+    bk.record_broadcast(c, p)
+    bsz = bk.thresholds_of(c).shape[0]
     return jnp.broadcast_to(p, (bsz,) + p.shape)
 
 
@@ -251,6 +292,10 @@ def _dp_broadcast_bwd(res, gy):
     sentinel, c = res
     dtype = sentinel.dtype
     n = backend.active().vector_norms_sq(gy)
+    if isinstance(c, bk.BkChannel):
+        # the cotangent arriving here IS the (B, ...) per-example grad
+        return (jnp.zeros(gy.shape[1:], dtype),
+                bk.emit(c, n, pg=gy.astype(jnp.float32)))
     f = clip_factor(c, n)
     dp = jnp.tensordot(f.astype(jnp.float32),
                        gy.astype(jnp.float32), axes=1).astype(dtype)
@@ -277,6 +322,7 @@ def dp_expert_linear(w: jax.Array, x: jax.Array, exids: jax.Array,
                      c: jax.Array) -> jax.Array:
     """w: (E, din, dout); x: (E, C, din) dispatched slots; exids: (E, C)
     example id per slot (-1 for empty slots); c: (E, B) encoded thresholds."""
+    bk.record_expert(c, w, x)
     return jnp.einsum("ecd,edf->ecf", x, w)
 
 
@@ -286,7 +332,7 @@ def _dp_expert_fwd(w, x, exids, c):
 
 def _dp_expert_bwd(res, gy):
     w, x, exids, c = res
-    bsz = c.shape[-1]
+    bsz = bk.thresholds_of(c).shape[-1]
     dx = jnp.einsum("ecf,edf->ecd", gy, w)
     valid = exids >= 0
     seg = jnp.where(valid, exids, bsz)  # invalid -> overflow bucket
@@ -302,6 +348,9 @@ def _dp_expert_bwd(res, gy):
         return carry, n_e
 
     _, n = jax.lax.scan(per_expert, 0, (x, gy, seg))  # n: (E, B)
+    if isinstance(c, bk.BkChannel):
+        dc = bk.emit(c, n, x=x, g=gy, seg=seg.astype(jnp.float32))
+        return jnp.zeros_like(w), dx, _int_zero_cotangent(exids), dc
     f = clip_factor(c, n)  # (E, B)
     fpad = jnp.concatenate([f, jnp.zeros((f.shape[0], 1), f.dtype)], axis=-1)
     fslot = jnp.take_along_axis(fpad, seg, axis=-1)  # (E, C)
@@ -331,6 +380,7 @@ def dp_expert_linear_grouped(w: jax.Array, x: jax.Array, c: jax.Array
                              ) -> jax.Array:
     """w: (E, din, dout); x: (B, E, C, din) per-example dispatch buffers
     (empty slots zero); c: (E, B) encoded thresholds."""
+    bk.record_expert_grouped(c, w, x)
     return jnp.einsum("becd,edf->becf", x, w)
 
 
@@ -343,6 +393,14 @@ def _dp_expert_grouped_bwd(res, gy):
     bsz, e, cap, din = x.shape
     dout = gy.shape[-1]
     dx = jnp.einsum("becf,edf->becd", gy, w)
+    if isinstance(c, bk.BkChannel):
+        gram_x = jnp.einsum("becd,beCd->becC", x.astype(jnp.float32),
+                            x.astype(jnp.float32))
+        gram_g = jnp.einsum("becf,beCf->becC", gy.astype(jnp.float32),
+                            gy.astype(jnp.float32))
+        n = jnp.sum(gram_x * gram_g, axis=(2, 3)).T  # (E, B)
+        dc = bk.emit(c, n, x=x, g=gy)
+        return jnp.zeros_like(w), dx, dc
     gram_cost = cap * cap * (din + dout)
     outer_cost = cap * din * dout
     use_outer = (outer_cost < gram_cost) and (din * dout <= (1 << 22))

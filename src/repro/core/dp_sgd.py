@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import accounting, noise as noise_lib
-from repro.core.clipping import LossFn, dp_clipped_gradients
+from repro.core.clipping import LossFn, base_mode, dp_clipped_gradients
 from repro.kernels import backend as ghost_backend
 from repro.core.quantile import QuantileState, clip_counts, init_quantile_state, update_thresholds
 from repro.core.spec import GroupLayout, P, SpecTree, _walk
@@ -29,7 +29,13 @@ from repro.core.spec import GroupLayout, P, SpecTree, _walk
 class DPConfig:
     """Configuration of the private learning run."""
 
-    mode: str = "per_layer"  # non_private|per_layer|ghost_flat|per_group|naive_flat
+    mode: str = "per_layer"  # non_private|per_layer|ghost_flat|per_group|
+    #   naive_flat (+ ghost_flat_twopass|per_group_twopass reference modes)
+    execution: str = "bk"  # bk | twopass — how the flat/group modes run:
+    #   bk (book-keeping, core.bk) caches ghost residuals during the single
+    #   norm backprop and contracts them in an epilogue; twopass is the
+    #   historical two-backward reference. Ignored by the other modes; a
+    #   `*_twopass` mode name forces twopass.
     # --- privacy budget ---
     epsilon: float | None = 8.0
     delta: float = 1e-5
@@ -104,11 +110,12 @@ def build_plan(cfg: DPConfig, layout: GroupLayout) -> DPPlan:
     if not cfg.private:
         return DPPlan(cfg, 0, 0.0, 0.0, 0.0, np.zeros(0, np.int64))
     mults = layout.sens_mults
-    if cfg.mode in ("ghost_flat", "naive_flat"):
+    mode = base_mode(cfg.mode)  # accounting is execution-independent
+    if mode in ("ghost_flat", "naive_flat"):
         num_groups = 1
         dims = np.array([int(layout.dims.sum())], np.int64)
         mults = np.ones(1, np.float32)
-    elif cfg.mode == "per_group":
+    elif mode == "per_group":
         if cfg.group_assignment is None:
             raise ValueError("per_group mode requires group_assignment")
         assign = np.asarray(cfg.group_assignment)
@@ -206,13 +213,14 @@ def _layout_stds(plan: DPPlan, layout: GroupLayout,
     per_group mode the supergroup std is broadcast to its members.
     """
     cfg = plan.config
+    mode = base_mode(cfg.mode)
     dims = jnp.asarray(plan.group_dims, jnp.float32)
     mults = jnp.asarray(plan.sens_mults, jnp.float32)
     stds_group = noise_lib.group_noise_stds(
         cfg.noise_strategy, thresholds * mults, dims, plan.sigma_new)  # (G,)
-    if cfg.mode in ("ghost_flat", "naive_flat"):
+    if mode in ("ghost_flat", "naive_flat"):
         return jnp.broadcast_to(stds_group, (layout.num_groups,)), thresholds
-    if cfg.mode == "per_group":
+    if mode == "per_group":
         assign = jnp.asarray(np.asarray(cfg.group_assignment), jnp.int32)
         return stds_group[assign], thresholds
     return stds_group, thresholds
@@ -252,27 +260,31 @@ def make_dp_train_step(
     if batch_size % nmb:
         raise ValueError("batch_size must divide by microbatches")
 
+    mode = base_mode(cfg.mode)
+    execution = "twopass" if cfg.mode.endswith("_twopass") else cfg.execution
+
     def _clip(params, batch, thresholds):
         """Clipped sums + norms, accumulated over microbatches (exact)."""
         def one(batch_mb):
-            if cfg.mode == "non_private":
+            if mode == "non_private":
                 return dp_clipped_gradients(
                     loss_fn, params, batch_mb, layout, mode="non_private",
                     batch_size=mb_size, trainable_key=trainable_key)
-            if cfg.mode == "per_layer":
+            if mode == "per_layer":
                 return dp_clipped_gradients(
                     loss_fn, params, batch_mb, layout, mode="per_layer",
                     batch_size=mb_size, thresholds=thresholds,
                     trainable_key=trainable_key)
-            if cfg.mode in ("ghost_flat", "naive_flat"):
+            if mode in ("ghost_flat", "naive_flat"):
                 return dp_clipped_gradients(
-                    loss_fn, params, batch_mb, layout, mode=cfg.mode,
+                    loss_fn, params, batch_mb, layout, mode=mode,
                     batch_size=mb_size, flat_threshold=thresholds[0],
-                    trainable_key=trainable_key)
+                    trainable_key=trainable_key, execution=execution)
             return dp_clipped_gradients(
                 loss_fn, params, batch_mb, layout, mode="per_group",
                 batch_size=mb_size, group_assignment=assign,
-                group_thresholds=thresholds, trainable_key=trainable_key)
+                group_thresholds=thresholds, trainable_key=trainable_key,
+                execution=execution)
 
         if nmb == 1:
             return one(batch)
@@ -322,13 +334,13 @@ def make_dp_train_step(
                           / jnp.sqrt(jnp.sum(thresholds**2) + 1e-20))
 
         res = _clip(params, batch, thresholds)
-        if cfg.mode == "non_private":
+        if mode == "non_private":
             noised = res.grads
             counts = jnp.zeros_like(thresholds)
         else:
-            if cfg.mode == "per_layer":
+            if mode == "per_layer":
                 counts = clip_counts(res.norms_sq, thresholds)
-            elif cfg.mode in ("ghost_flat", "naive_flat"):
+            elif mode in ("ghost_flat", "naive_flat"):
                 counts = clip_counts(jnp.sum(res.norms_sq, axis=0)[None],
                                      thresholds)
             else:  # per_group

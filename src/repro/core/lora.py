@@ -22,6 +22,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import bk
 from repro.core.ghost import clip_factor
 from repro.core.spec import P
 from repro.kernels import backend
@@ -41,6 +42,7 @@ def lora_spec(d_in: int, d_out: int, rank: int, *, stack: tuple[int, ...] = (),
 @jax.custom_vjp
 def dp_lora_linear(a, b, w_frozen, x, c, alpha):
     """y = x @ w_frozen + (x @ a) @ b * (alpha / r); {a,b} one clip group."""
+    bk.record_lora(c, a, b, x)
     r = a.shape[-1]
     scale = alpha / r
     return x @ w_frozen + (x @ a) @ b * scale
@@ -66,6 +68,13 @@ def _bwd(res, gy):
     n_b = eng.linear_norms_sq(xa, g3 * scale)  # ||dB_i||²
     n_a = eng.linear_norms_sq(x3, gbt)  # ||dA_i||²
     n = n_a + n_b
+    if isinstance(c, bk.BkChannel):
+        # BK capture: stash both residual pairs (dA <- (x, G B^T s);
+        # dB <- (x A, G s)); the epilogue contracts each with the factors
+        dc = bk.emit(c, n, a1=x3, g1=gbt, a2=xa, g2=g3 * scale)
+        return (jnp.zeros_like(a), jnp.zeros_like(b),
+                jnp.zeros_like(w_frozen), dx, dc,
+                jnp.zeros_like(jnp.asarray(alpha, jnp.float32)))
     f = clip_factor(c, n)
     da = eng.clipped_sum_linear(x3, gbt, f).astype(a.dtype)
     db = eng.clipped_sum_linear(xa, g3 * scale, f).astype(b.dtype)

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 
 from repro.core import ghost
 from repro.core.ghost import clip_factor
+from repro.kernels.bk import scale_contract as scale_contract_kernel
 from repro.kernels.clip_reduce import clip_reduce
 from repro.kernels.fused_clip import fused_norm_clip
 from repro.kernels.fused_clip import padded_dims as fused_clip_padded_dims
@@ -97,6 +98,14 @@ class EngineConfig:
     # they only consume norms², and XLA can dead-code-eliminate the unused
     # dW einsum of the composed path but never half of one pallas_call.
     prefer_fused: bool = True
+    # True -> the dp_* custom VJPs are in a book-keeping capture pass
+    # (repro.core.bk): when a BkChannel threshold reaches a primitive, its
+    # backward rule emits per-example norms² AND stashes the (a, g) ghost
+    # residuals through the channel's sink cotangent instead of contracting
+    # weight grads. Scoped on by bk.capture_clipped only; primitives refuse
+    # BkChannels outside this scope (a capture pass returns ZERO param
+    # cotangents, so it must never be mistaken for a gradient pass).
+    capture_residuals: bool = False
 
 
 _REGISTRY: dict[str, type["Backend"]] = {}
@@ -171,6 +180,20 @@ class Backend:
     def clipped_sum_scale(self, xhat, g, factors):
         return ghost.clipped_sum_scale(xhat, g, factors)
 
+    # -- BK epilogue: scaled contraction over cached residuals -------------
+    def scale_contract(self, a, g, factors):
+        """Σ_i f[s,i] A[s,i]ᵀ G[s,i] per stack slice (repro.core.bk).
+
+        a: (S, B, T, din); g: (S, B, T, dout); factors: (S, B) ->
+        (S, din, dout) f32. Accepts the unstacked 3-D form too.
+        """
+        if a.ndim == 3:
+            return ghost.clipped_sum_linear(a, g, factors)
+        a32 = a.astype(jnp.float32)
+        gs = (g.astype(jnp.float32)
+              * factors[:, :, None, None].astype(jnp.float32))
+        return jnp.einsum("sbti,sbto->sio", a32, gs)
+
     # -- fused norm + clip + reduce ---------------------------------------
     def linear_clip(self, a, g, c, extra_norms_sq=None):
         """One linear layer's whole backward clip:  (n_total, f, dW).
@@ -241,6 +264,11 @@ class PallasBackend(Backend):
         n = n_w if extra_norms_sq is None else n_w + extra_norms_sq
         return n, clip_factor(c, n), dw
 
+    def scale_contract(self, a, g, factors):
+        return scale_contract_kernel(a, g, factors, bi=self.config.bi,
+                                     bj=self.config.bj, bt=self.config.bt,
+                                     interpret=self._interpret())
+
 
 def choose_linear_path(t: int, din: int, dout: int, config: EngineConfig,
                        *, on_tpu: bool | None = None) -> str:
@@ -298,6 +326,14 @@ class AutoBackend(Backend):
 
     def linear_clip(self, a, g, c, extra_norms_sq=None):
         return self._pick(a, g).linear_clip(a, g, c, extra_norms_sq)
+
+    def scale_contract(self, a, g, factors):
+        if a.ndim == 3:
+            return self._pick(a, g).scale_contract(a, g, factors)
+        t, din, dout = a.shape[2], a.shape[-1], g.shape[-1]
+        choice = choose_linear_path(t, din, dout, self.config)
+        eng = self._pallas if choice == "pallas" else self._xla
+        return eng.scale_contract(a, g, factors)
 
 
 # ---------------------------------------------------------------------------

@@ -38,6 +38,19 @@ def ghost_norm_blocked_ref(a: jnp.ndarray, g: jnp.ndarray, num_blocks: int,
     return jnp.sum(pg * pg, axis=(2, 3))
 
 
+def scale_contract_ref(a: jnp.ndarray, g: jnp.ndarray,
+                       factors: jnp.ndarray) -> jnp.ndarray:
+    """BK epilogue: Σ_i f[s,i] A[s,i]ᵀ G[s,i] per stack slice.
+
+    a: (S, B, T, din); g: (S, B, T, dout); factors: (S, B) -> (S, din, dout).
+    Also accepts the unstacked 3-D/(B,) form (returns (din, dout))."""
+    if a.ndim == 3:
+        return clip_reduce_ref(a, g, factors)
+    a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
+    gs = g32 * factors[:, :, None, None].astype(jnp.float32)
+    return jnp.einsum("sbti,sbto->sio", a32, gs)
+
+
 def fused_norm_clip_ref(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,
                         extra_norms_sq: jnp.ndarray | None = None):
     """(norms_sq (B,), clipped summed grad) with the shared encoded-threshold

@@ -41,7 +41,7 @@ from repro.core.dp_sgd import DPConfig, make_dp_train_step
 from repro.core.spec import abstract_params
 from repro.launch import inputs as I
 from repro.launch.mesh import make_production_mesh
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.hlo_analysis import analyze_hlo, backward_passes
 from repro.launch.sharding import (batch_shardings, cache_shardings,
                                    opt_state_shardings, params_shardings,
                                    replicated)
@@ -127,6 +127,7 @@ def _shape_for(shape_name: str, debug: bool):
 
 def build_train_lowering(arch: str, shape_name: str, mesh, *,
                          clipping: str = "per_layer",
+                         execution: str = "bk",
                          microbatches: int = 8,
                          rwkv_formulation: str = "chunked",
                          debug: bool = False,
@@ -154,7 +155,7 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     # TPU pallas custom-call cannot lower on the CPU backend used here).
     dpc = DPConfig(mode=clipping, sigma=1.0, sampling_rate=1e-3,
                    steps=1000, adaptive=True, init_threshold=1.0,
-                   microbatches=microbatches,
+                   microbatches=microbatches, execution=execution,
                    batch_axes=data_axes(mesh), backend="xla")
     init_fn, step_fn, plan = make_dp_train_step(
         model.loss_fn, getattr(model, "dp_spec", model.spec), model.layout,
@@ -230,8 +231,21 @@ def build_serve_lowering(arch: str, shape_name: str, mesh, *,
     return lowered, model, cfg
 
 
+def _layer_trip(cfg) -> int:
+    """Depth of the model's dominant homogeneous scan run (the
+    `known_trip_count` its layer loops carry in the compiled HLO)."""
+    n = cfg.num_layers
+    runs = [n]
+    if getattr(cfg, "num_experts", 0) and getattr(cfg, "first_k_dense", 0):
+        runs = [cfg.first_k_dense, n - cfg.first_k_dense]
+    if getattr(cfg, "encoder_layers", 0):
+        runs.append(cfg.encoder_layers)
+    return max(r for r in runs)
+
+
 def run_one(arch: str, shape_name: str, mesh_kind: str, *,
-            clipping: str = "per_layer", save: bool = True,
+            clipping: str = "per_layer", execution: str = "bk",
+            save: bool = True,
             rwkv_formulation: str = "chunked",
             microbatches: int | None = None, debug: bool = False,
             ghost_outer_cap: int | None = None,
@@ -271,7 +285,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         if kind == "train":
             mb = microbatches if microbatches is not None else (2 if debug else 8)
             lowered, model, cfg = build_train_lowering(
-                arch, shape_name, mesh, clipping=clipping, microbatches=mb,
+                arch, shape_name, mesh, clipping=clipping,
+                execution=execution, microbatches=mb,
                 rwkv_formulation=rwkv_formulation, debug=debug,
                 moe_dispatch=moe_dispatch)
         else:
@@ -301,9 +316,16 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         coll = {k: {"count": v["count"], "bytes": v["bytes"]}
                 for k, v in totals.collectives.items()}
         coll["total_bytes"] = sum(v["bytes"] for v in coll.values())
+        # assert (not assume) the pass structure: how many full backward
+        # traversals of the layer stack did this step actually compile to?
+        trip = _layer_trip(cfg)
+        bw_passes = (backward_passes(hlo, trip)
+                     if kind == "train" and trip >= 2 else None)
         result = {
             "arch": arch, "shape": shape_name, "mesh": mesh_kind,
             "kind": kind, "clipping": clipping if kind == "train" else None,
+            "execution": execution if kind == "train" else None,
+            "backward_passes": bw_passes,
             "status": "ok",
             "num_params": model.num_params,
             "num_groups": model.layout.num_groups,
@@ -330,6 +352,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
     if save:
         os.makedirs(RESULTS_DIR, exist_ok=True)
         suffix = "" if clipping == "per_layer" else f"__{clipping}"
+        if execution != "bk":
+            suffix += f"__{execution}"
         if tag:
             suffix += f"__{tag}"
         fn = os.path.join(
@@ -346,6 +370,10 @@ def main() -> int:
     ap.add_argument("--mesh", choices=["single", "multi", "both", "debug"],
                     default="single")
     ap.add_argument("--clipping", default="per_layer")
+    ap.add_argument("--execution", default="bk", choices=["bk", "twopass"],
+                    help="flat/group clipping execution: bk (single "
+                         "backprop + book-keeping epilogue) or twopass "
+                         "(reference two-backward driver)")
     ap.add_argument("--microbatches", type=int, default=None)
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
@@ -364,6 +392,8 @@ def main() -> int:
     failures = 0
     for a, s, mk in combos:
         suffix = "" if args.clipping == "per_layer" else f"__{args.clipping}"
+        if args.execution != "bk":
+            suffix += f"__{args.execution}"
         fn = os.path.join(RESULTS_DIR, f"{a}__{s}__{mk}{suffix}.json")
         if args.skip_existing and os.path.exists(fn):
             with open(fn) as f:
@@ -372,6 +402,7 @@ def main() -> int:
                 print(f"[skip-existing] {a} {s} {mk}: {prev['status']}")
                 continue
         r = run_one(a, s, mk, clipping=args.clipping,
+                    execution=args.execution,
                     microbatches=args.microbatches, save=not debug,
                     debug=debug)
         if r["status"] == "ok":

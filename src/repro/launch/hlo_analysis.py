@@ -280,6 +280,115 @@ def analyze_hlo(text: str) -> Totals:
 
 
 # ---------------------------------------------------------------------------
+# Backward-pass counting: assert (don't assume) the BK engine's win.
+# ---------------------------------------------------------------------------
+
+
+def _reachable(an: HloAnalyzer) -> set:
+    """Computations reachable from ENTRY (skips dead leftovers)."""
+    seen: set[str] = set()
+    stack = [an.entry]
+    while stack:
+        comp = stack.pop()
+        if comp in seen:
+            continue
+        seen.add(comp)
+        for ins in an.comps.get(comp, []):
+            for m in _CALLED.finditer(ins.rest):
+                if m.group(1) in an.comps:
+                    stack.append(m.group(1))
+            bm = _BRANCHES.search(ins.rest)
+            if bm:
+                stack.extend(b.strip().lstrip("%")
+                             for b in bm.group(1).split(","))
+            stack.extend(_TRUEFALSE.findall(ins.rest))
+    return seen
+
+
+def _comp_has(an: HloAnalyzer, comp: str, pred, memo: dict) -> bool:
+    """Does `comp` (transitively) contain an instruction matching pred?"""
+    if comp in memo:
+        return memo[comp]
+    memo[comp] = False  # cycle guard
+    for ins in an.comps.get(comp, []):
+        if pred(ins):
+            memo[comp] = True
+            return True
+        for m in _CALLED.finditer(ins.rest):
+            if m.group(1) in an.comps and _comp_has(an, m.group(1), pred,
+                                                    memo):
+                memo[comp] = True
+                return True
+    return memo[comp]
+
+
+_TRANSPOSED = re.compile(r'op_name="[^"]*transpose\(jvp')
+
+
+def _layer_loops(text: str, trip: int) -> tuple[int, int]:
+    """(forward, backward) counts of innermost dot-bearing layer loops.
+
+    A scanned layer stack of depth L lowers to one `while` with
+    known_trip_count == L per traversal direction. Direction comes from
+    JAX's op_name metadata: the transposed (reverse) scan of a backward
+    pass tags its body `transpose(jvp(while))/...`, the forward scan
+    `jvp(while)`/`while`. Outer loops that merely CONTAIN trip-matching
+    loops (e.g. a microbatch scan whose trip count collides with L) are
+    excluded, as are dot-free bookkeeping loops (data pipelines, quantile
+    updates).
+    """
+    an = HloAnalyzer(text)
+    has_dot: dict = {}
+    has_inner: dict = {}
+    has_transpose: dict = {}
+
+    def is_dot(ins):
+        return ins.op in ("dot", "dot-general")
+
+    def is_trip_while(ins):
+        if ins.op != "while":
+            return False
+        t = _TRIP.search(ins.rest)
+        return bool(t) and int(t.group(1)) == trip
+
+    def is_transposed(ins):
+        return bool(_TRANSPOSED.search(ins.rest))
+
+    fwd = bwd = 0
+    for comp in _reachable(an):
+        for ins in an.comps.get(comp, []):
+            if not is_trip_while(ins):
+                continue
+            bm = re.search(r"body=%?([\w.\-]+)", ins.rest)
+            if not bm or bm.group(1) not in an.comps:
+                continue
+            body = bm.group(1)
+            if not _comp_has(an, body, is_dot, has_dot):
+                continue
+            if _comp_has(an, body, is_trip_while, has_inner):
+                continue  # outer loop wrapping the real layer loops
+            if _comp_has(an, body, is_transposed, has_transpose):
+                bwd += 1
+            else:
+                fwd += 1
+    return fwd, bwd
+
+
+def backward_passes(text: str, layer_trip: int) -> int:
+    """Full model backward passes in a compiled train step.
+
+    Counts the transposed (reverse-iterating) layer-stack loops — see
+    `_layer_loops`. The BK engine's claim is thereby asserted from the
+    compiled HLO, not assumed: ONE backward pass for execution=bk (and
+    per_layer / non_private), TWO for the `*_twopass` flat/group drivers —
+    at any microbatch count (each microbatch body repeats the same
+    structure; loops are counted statically). For models with several
+    homogeneous stack runs pass the depth of the run of interest.
+    """
+    return _layer_loops(text, layer_trip)[1]
+
+
+# ---------------------------------------------------------------------------
 # Collective attribution: which program sites emit the bytes.
 # ---------------------------------------------------------------------------
 

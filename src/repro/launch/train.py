@@ -39,8 +39,16 @@ def build_everything(args):
                              rate=args.batch / rows.shape[0],
                              max_batch=args.batch, seed=1)
 
+    assign = None
+    if args.clipping.startswith("per_group"):
+        # per-device analogue: contiguous equal split of the layout groups
+        # into --group-count supergroups (pipeline stages / model shards)
+        k = model.layout.num_groups
+        gc = min(args.group_count, k)
+        assign = tuple(i * gc // k for i in range(k))
     dpc = DPConfig(
         mode=args.clipping,
+        group_assignment=assign,
         epsilon=args.epsilon if args.sigma is None else None,
         sigma=args.sigma, delta=args.delta,
         sampling_rate=args.batch / rows.shape[0], steps=args.steps,
@@ -51,6 +59,7 @@ def build_everything(args):
         noise_strategy=args.noise_strategy,
         microbatches=args.microbatches,
         backend=args.backend,
+        execution=args.execution,
     )
     sched = optim.linear_decay(args.lr, args.steps, warmup_steps=args.steps // 20)
     if args.optimizer == "adam":
@@ -73,6 +82,11 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--variant", default=None)
     ap.add_argument("--clipping", default="per_layer")
+    ap.add_argument("--execution", default="bk", choices=["bk", "twopass"],
+                    help="flat/group clipping execution: bk runs ONE "
+                         "backprop and contracts cached ghost residuals in "
+                         "an epilogue (core.bk); twopass is the reference "
+                         "two-backward driver")
     ap.add_argument("--epsilon", type=float, default=8.0)
     ap.add_argument("--delta", type=float, default=1e-5)
     ap.add_argument("--sigma", type=float, default=None)
@@ -89,6 +103,9 @@ def main():
     ap.add_argument("--quantile", type=float, default=0.5)
     ap.add_argument("--quantile-budget", type=float, default=0.01)
     ap.add_argument("--noise-strategy", default="global")
+    ap.add_argument("--group-count", type=int, default=2,
+                    help="per_group clipping: number of supergroups "
+                         "(contiguous equal split of the layout groups)")
     ap.add_argument("--backend", default="auto",
                     choices=["xla", "pallas", "auto"],
                     help="ghost-op engine (repro.kernels.backend): xla "
@@ -103,7 +120,9 @@ def main():
     cfg, model, rows, sampler, init_fn, step_fn, plan = build_everything(args)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
     opt_state, dp_state = init_fn(params)
-    step = jax.jit(step_fn)
+    # donate params/opt_state/dp_state: they update in place every step, so
+    # XLA aliases them input->output instead of double-buffering the model
+    step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
     key = jax.random.PRNGKey(args.seed + 1)
 
     print(f"# arch={cfg.name} params={model.num_params:,} "
