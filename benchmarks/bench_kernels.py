@@ -21,7 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import csv_line, timeit
+from benchmarks.common import csv_line, timeit, topology
 from repro.kernels import backend
 
 _OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
@@ -113,7 +113,7 @@ def run(quick: bool = True) -> list[str]:
                            records, lines)
 
     payload = {
-        "jax_backend": jax.default_backend(),
+        "topology": topology(),
         "unix_time": int(time.time()),
         "quick": quick,
         "records": records,

@@ -23,7 +23,7 @@ import time
 
 import jax
 
-from benchmarks.common import csv_line, timeit
+from benchmarks.common import csv_line, timeit, topology
 from repro import optim
 from repro.configs import get_config
 from repro.core.dp_sgd import DPConfig, make_dp_train_step
@@ -92,7 +92,7 @@ def run(quick: bool = True) -> list[str]:
                               f"ratio_bk_vs_twopass={r:.2f}"))
 
     payload = {
-        "jax_backend": jax.default_backend(),
+        "topology": topology(),
         "unix_time": int(time.time()),
         "quick": quick,
         "batch": b, "seq": t,

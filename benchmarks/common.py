@@ -1,6 +1,7 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
+import os
 import time
 
 import jax
@@ -9,6 +10,17 @@ import numpy as np
 
 from repro.core import dp_layers as dpl
 from repro.core.spec import GroupLayout, P, init_params
+
+
+def topology() -> dict:
+    """Device-topology metadata stamped into every BENCH_*.json record, so
+    numbers from different machines / virtual-device configurations are
+    never compared blind across PRs."""
+    return {
+        "jax_backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+    }
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

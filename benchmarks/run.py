@@ -67,11 +67,12 @@ def main() -> None:
         return
 
     from benchmarks import (bench_epochs, bench_kernels, bench_quantile,
-                            bench_scaling, bench_throughput, bench_utility,
-                            roofline)
+                            bench_scaling, bench_sharded, bench_throughput,
+                            bench_utility, roofline)
     suites = [
         ("throughput", bench_throughput),
         ("kernels", bench_kernels),
+        ("sharded", bench_sharded),
         ("utility", bench_utility),
         ("epochs", bench_epochs),
         ("quantile", bench_quantile),

@@ -1,6 +1,21 @@
 #!/usr/bin/env bash
-# CI: tier-1 tests + the perf smoke in one command.
+# CI: tier-1 tests + the perf smoke + the 8-virtual-device sharded stage.
 set -euo pipefail
 cd "$(dirname "$0")"
-./test.sh
+# the sharded-engine subprocess test is covered by the explicit 8-device
+# stage below — deselect it here so CI pays the ~4 min suite once (the
+# bare tier-1 command `scripts/test.sh` still runs everything)
+./test.sh --deselect \
+    tests/test_sharded.py::test_sharded_engine_checks_subprocess
 ./bench_smoke.sh
+
+# ---- sharded stage: the multi-device engine on 8 virtual CPU devices ----
+# Runs the full sharded check suite (parity + the zero-model-axis-norm-
+# collectives HLO assertion) with the forced device count, then a quick
+# bench_sharded smoke (which subprocesses its own device sets).
+cd ..
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+    python tests/sharded_checks.py
+python -m benchmarks.bench_sharded --smoke
+python -m benchmarks.run --aggregate-only

@@ -452,11 +452,18 @@ def _leaf_grad(layout, recipes, residuals, f_rows, node: P, path, eng):
 
 
 def contract_clipped(layout: GroupLayout, recipes: dict, residuals: dict,
-                     f_rows, *, eng=None):
+                     f_rows, *, eng=None, psum_axes=None):
     """Clipped summed grads from cached residuals + (K, B) clip factors.
 
     Returns a pytree matching the layout's spec (== the trainable params
     tree the two-pass drivers produce), in the spec leaf dtypes.
+
+    psum_axes: when set (sharded execution, inside `shard_map`), every
+    leaf's contraction is followed by a `lax.psum` over those mesh axes —
+    and the epilogue is emitted INTERLEAVED: leaf i's contraction is issued
+    before leaf i-1's psum, so the latency-hiding scheduler overlaps each
+    layer's gradient reduction with the next layer's `scale_contract`
+    instead of serializing one big tree-reduce after all the compute.
     """
     eng = eng or backend.active()
 
@@ -466,4 +473,36 @@ def contract_clipped(layout: GroupLayout, recipes: dict, residuals: dict,
                               path, eng)
         return {k: build(v, path + (k,)) for k, v in node.items()}
 
-    return build(layout._spec, ())
+    if psum_axes is None:
+        return build(layout._spec, ())
+
+    leaves: list[tuple[tuple, P]] = []
+
+    def collect(node, path):
+        if isinstance(node, P):
+            leaves.append((path, node))
+            return
+        for k in node:
+            collect(node[k], path + (k,))
+
+    collect(layout._spec, ())
+    reduced: dict[tuple, Any] = {}
+    prev = None  # (path, unreduced contraction)
+    for path, node in leaves:
+        with jax.named_scope("bk_epilogue_contract"):
+            cur = _leaf_grad(layout, recipes, residuals, f_rows, node,
+                             path, eng)
+        if prev is not None:
+            with jax.named_scope("bk_epilogue_grad_psum"):
+                reduced[prev[0]] = jax.lax.psum(prev[1], psum_axes)
+        prev = (path, cur)
+    if prev is not None:
+        with jax.named_scope("bk_epilogue_grad_psum"):
+            reduced[prev[0]] = jax.lax.psum(prev[1], psum_axes)
+
+    def rebuild(node, path):
+        if isinstance(node, P):
+            return reduced[path]
+        return {k: rebuild(v, path + (k,)) for k, v in node.items()}
+
+    return rebuild(layout._spec, ())

@@ -57,6 +57,9 @@ class DPConfig:
     threshold_rescale: float | None = None
     # --- per_group / per-device mode ---
     group_assignment: tuple[int, ...] | None = None  # layout-group -> supergroup
+    num_supergroups: int | None = None  # explicit supergroup count G (else
+    #   max(assignment)+1). The sharded engine sets G = model-axis size so a
+    #   shard that owns no group still has a (well-defined, idle) threshold.
     # --- ghost-op backend (repro.kernels.backend) ---
     backend: str = "auto"  # xla | pallas | auto — engine for the ghost ops;
     #   scoped around the step function so jitted traces capture it
@@ -122,7 +125,10 @@ def build_plan(cfg: DPConfig, layout: GroupLayout) -> DPPlan:
         if assign.shape != (layout.num_groups,):
             raise ValueError(
                 f"group_assignment must have shape ({layout.num_groups},)")
-        num_groups = int(assign.max()) + 1
+        num_groups = (cfg.num_supergroups if cfg.num_supergroups
+                      else int(assign.max()) + 1)
+        if num_groups <= int(assign.max()):
+            raise ValueError("num_supergroups smaller than assignment range")
         dims = np.zeros(num_groups, np.int64)
         np.add.at(dims, assign, layout.dims)
         m = np.ones(num_groups, np.float32)
@@ -231,6 +237,50 @@ def _layout_stds(plan: DPPlan, layout: GroupLayout,
 # ---------------------------------------------------------------------------
 
 
+def _effective_thresholds(cfg: DPConfig, plan: DPPlan, dp_state: DPState):
+    """Tracked thresholds, with the Appendix-A.1 global rescale applied."""
+    thresholds = dp_state.qstate.thresholds  # (G,)
+    if cfg.threshold_rescale is not None and plan.num_noise_groups > 1:
+        thresholds = (cfg.threshold_rescale * thresholds
+                      / jnp.sqrt(jnp.sum(thresholds**2) + 1e-20))
+    return thresholds
+
+
+def _apply_update(cfg: DPConfig, plan: DPPlan, optimizer, trainable_key,
+                  batch_size, params, opt_state, dp_state, noised, counts,
+                  thresholds, loss, k_q):
+    """Post-clipping tail shared by the single-device and sharded steps:
+    gradient averaging, optimizer update, private quantile update, metrics.
+    `noised` must be the (noised) SUMMED clipped grads over the full batch;
+    `counts` the full-batch clip counts — both already globally reduced in
+    the sharded case."""
+    tgrads = noised if trainable_key is None else noised[trainable_key]
+    tparams = params if trainable_key is None else params[trainable_key]
+    grad_avg = jax.tree_util.tree_map(
+        lambda g: (g / batch_size).astype(g.dtype), tgrads)
+    updates, new_opt_state = optimizer.update(grad_avg, opt_state, tparams)
+    new_tparams = jax.tree_util.tree_map(lambda p, u: p + u, tparams,
+                                         updates)
+    new_params = (new_tparams if trainable_key is None
+                  else {**params, trainable_key: new_tparams})
+
+    qstate = dp_state.qstate
+    if cfg.private and cfg.adaptive:
+        qstate = update_thresholds(qstate, counts, batch_size, k_q)
+    new_dp_state = DPState(qstate=qstate, step=dp_state.step + 1)
+
+    gn = jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32)))
+        for l in jax.tree_util.tree_leaves(grad_avg)))
+    metrics = StepMetrics(
+        loss=loss,
+        clip_fraction=1.0 - jnp.mean(counts) / batch_size,
+        mean_threshold=jnp.mean(thresholds),
+        grad_norm=gn,
+    )
+    return new_params, new_opt_state, new_dp_state, metrics
+
+
 def make_dp_train_step(
     loss_fn: LossFn,
     spec: SpecTree,
@@ -240,13 +290,29 @@ def make_dp_train_step(
     *,
     batch_size: int,
     trainable_key: str | None = None,
+    mesh: Any = None,
 ) -> tuple[Callable, Callable, DPPlan]:
     """Returns (init_fn, step_fn, plan).
 
     init_fn(params) -> (opt_state, dp_state)
     step_fn(params, opt_state, dp_state, batch, key)
         -> (params, opt_state, dp_state, StepMetrics)
+
+    mesh: a (data[, pod], model) device mesh. When given, step_fn is built
+    under `shard_map` — batch sharded over the data plane, clipping
+    bookkeeping distributed over the model axis by shard ownership
+    (launch.sharding.group_shard_assignment), per-device (`per_group`)
+    norms and clip factors shard-local, `ghost_flat` paying its one (B,)
+    model-axis norm psum, and the BK epilogue interleaving each layer's
+    gradient psum with the next layer's contraction. `batch_size` stays the
+    GLOBAL batch. jit the returned step_fn as usual (optionally with
+    launch.sharding params_shardings as in_shardings to keep the weights
+    STORED model-sharded between steps).
     """
+    if mesh is not None:
+        return _make_sharded_step(loss_fn, spec, layout, optimizer, cfg,
+                                  batch_size=batch_size,
+                                  trainable_key=trainable_key, mesh=mesh)
     plan = build_plan(cfg, layout)
     assign = (jnp.asarray(np.asarray(cfg.group_assignment), jnp.int32)
               if cfg.group_assignment is not None else None)
@@ -327,11 +393,7 @@ def make_dp_train_step(
 
     def _step(params, opt_state, dp_state, batch, key):
         k_noise, k_q = jax.random.split(jax.random.fold_in(key, dp_state.step))
-        thresholds = dp_state.qstate.thresholds  # (G,)
-        if (cfg.threshold_rescale is not None
-                and plan.num_noise_groups > 1):
-            thresholds = (cfg.threshold_rescale * thresholds
-                          / jnp.sqrt(jnp.sum(thresholds**2) + 1e-20))
+        thresholds = _effective_thresholds(cfg, plan, dp_state)
 
         res = _clip(params, batch, thresholds)
         if mode == "non_private":
@@ -351,30 +413,142 @@ def make_dp_train_step(
             noised = add_noise_to_grads(spec, layout, res.grads, stds,
                                         k_noise, cfg.noise_dtype)
 
-        tgrads = noised if trainable_key is None else noised[trainable_key]
-        tparams = params if trainable_key is None else params[trainable_key]
-        grad_avg = jax.tree_util.tree_map(
-            lambda g: (g / batch_size).astype(g.dtype), tgrads)
-        updates, new_opt_state = optimizer.update(grad_avg, opt_state, tparams)
-        new_tparams = jax.tree_util.tree_map(lambda p, u: p + u, tparams,
-                                             updates)
-        new_params = (new_tparams if trainable_key is None
-                      else {**params, trainable_key: new_tparams})
+        return _apply_update(cfg, plan, optimizer, trainable_key, batch_size,
+                             params, opt_state, dp_state, noised, counts,
+                             thresholds, res.loss, k_q)
 
-        qstate = dp_state.qstate
-        if cfg.private and cfg.adaptive:
-            qstate = update_thresholds(qstate, counts, batch_size, k_q)
-        new_dp_state = DPState(qstate=qstate, step=dp_state.step + 1)
+    return init_fn, step_fn, plan
 
-        gn = jnp.sqrt(sum(
-            jnp.sum(jnp.square(l.astype(jnp.float32)))
-            for l in jax.tree_util.tree_leaves(grad_avg)))
-        metrics = StepMetrics(
-            loss=res.loss,
-            clip_fraction=1.0 - jnp.mean(counts) / batch_size,
-            mean_threshold=jnp.mean(thresholds),
-            grad_norm=gn,
-        )
-        return new_params, new_opt_state, new_dp_state, metrics
 
+# ---------------------------------------------------------------------------
+# The sharded (shard_map) train-step factory.
+# ---------------------------------------------------------------------------
+
+
+def _make_sharded_step(loss_fn, spec, layout, optimizer, cfg: DPConfig, *,
+                       batch_size: int, trainable_key: str | None, mesh):
+    """`make_dp_train_step` under manual SPMD on a (data[, pod], model) mesh.
+
+    See `repro.core.clipping.sharded_clipped_gradients` for the per-mode
+    communication contract. The quantile update, noise draw and optimizer
+    run replicated (identical keys on every device), so outputs are
+    replicated and out_specs are fully unsharded.
+    """
+    # lazy: keep core -> launch imports out of module import time
+    from jax.sharding import PartitionSpec as PS
+    from repro.core.clipping import sharded_clipped_gradients
+    from repro.launch.mesh import data_axes as _data_axes, named_shard_map
+    from repro.launch.sharding import group_shard_assignment
+
+    dax = tuple(_data_axes(mesh))
+    model_ax = "model"
+    d_size = int(np.prod([mesh.shape[a] for a in dax]))
+    m_size = int(mesh.shape[model_ax])
+    if batch_size % d_size:
+        raise ValueError(f"global batch {batch_size} must divide across the "
+                         f"{d_size}-way data plane")
+    b_local = batch_size // d_size
+    nmb = cfg.microbatches
+    if b_local % nmb:
+        raise ValueError("per-shard batch must divide by microbatches")
+    mb_local = b_local // nmb
+
+    mode = base_mode(cfg.mode)
+    execution = "twopass" if cfg.mode.endswith("_twopass") else cfg.execution
+    if mode not in ("non_private", "per_layer", "ghost_flat", "per_group"):
+        raise ValueError(
+            f"sharded execution supports non_private/per_layer/ghost_flat/"
+            f"per_group, not {mode!r} (naive_flat is a single-device oracle)")
+    own_assign = group_shard_assignment(layout, m_size)
+    if mode == "per_group":
+        if (cfg.group_assignment is not None
+                and tuple(cfg.group_assignment) != own_assign):
+            raise ValueError(
+                "sharded per_group IS per-device clipping: group_assignment "
+                "must equal the model-axis shard ownership (leave it unset "
+                "to derive it via launch.sharding.group_shard_assignment)")
+        cfg = dataclasses.replace(cfg, group_assignment=own_assign,
+                                  num_supergroups=m_size)
+    plan = build_plan(cfg, layout)
+    shard_assign = jnp.asarray(np.asarray(own_assign), jnp.int32)
+
+    def init_fn(params):
+        tp = params if trainable_key is None else params[trainable_key]
+        return optimizer.init(tp), init_dp_state(plan)
+
+    def _one(params, batch_mb, thresholds, bsz):
+        kw = dict(batch_size=bsz, data_size=d_size, data_axes=dax,
+                  model_axis=model_ax, trainable_key=trainable_key)
+        if mode == "non_private":
+            return sharded_clipped_gradients(loss_fn, params, batch_mb,
+                                             layout, mode=mode, **kw)
+        if mode == "per_layer":
+            return sharded_clipped_gradients(
+                loss_fn, params, batch_mb, layout, mode=mode,
+                thresholds=thresholds, **kw)
+        if mode == "ghost_flat":
+            return sharded_clipped_gradients(
+                loss_fn, params, batch_mb, layout, mode=mode,
+                flat_threshold=thresholds[0], shard_assignment=shard_assign,
+                execution=execution, **kw)
+        return sharded_clipped_gradients(
+            loss_fn, params, batch_mb, layout, mode="per_group",
+            group_thresholds=thresholds, shard_assignment=shard_assign,
+            execution=execution, **kw)
+
+    def _clip(params, batch, thresholds):
+        if nmb == 1:
+            return _one(params, batch, thresholds, b_local)
+        # microbatch accumulation: the per-microbatch grads come back
+        # already globally psum'd, so plain accumulation stays exact
+        split = jax.tree_util.tree_map(
+            lambda x: x.reshape((nmb, mb_local) + x.shape[1:]), batch)
+        tp = params if trainable_key is None else {
+            trainable_key: params[trainable_key]}
+        g0 = jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, jnp.float32), tp)
+        c0 = jnp.zeros((max(plan.num_noise_groups, 1)
+                        if mode != "per_layer" else layout.num_groups,),
+                       jnp.float32)
+
+        def body(acc, batch_mb):
+            res = _one(params, batch_mb, thresholds, mb_local)
+            g_acc, loss_acc, cnt_acc = acc
+            g_acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, res.grads)
+            return ((g_acc, loss_acc + res.loss, cnt_acc + res.counts),
+                    res.norms_sq)
+
+        (g_sum, loss_sum, counts), norms = jax.lax.scan(
+            body, (g0, 0.0, c0), split)
+        norms = jnp.moveaxis(norms, 0, 1).reshape(layout.num_groups, b_local)
+        from repro.core.clipping import ShardedClipResult
+        g_sum = jax.tree_util.tree_map(
+            lambda a, x: a.astype(x.dtype), g_sum, tp)
+        return ShardedClipResult(g_sum, norms, loss_sum / nmb, counts)
+
+    def _body(params, opt_state, dp_state, batch, key):
+        with ghost_backend.scoped(cfg.backend):
+            k_noise, k_q = jax.random.split(
+                jax.random.fold_in(key, dp_state.step))
+            thresholds = _effective_thresholds(cfg, plan, dp_state)
+
+            res = _clip(params, batch, thresholds)
+            if mode == "non_private":
+                noised = res.grads
+                counts = jnp.zeros_like(thresholds)
+            else:
+                counts = res.counts  # globally reduced by the clip driver
+                stds, _ = _layout_stds(plan, layout, thresholds)
+                noised = add_noise_to_grads(spec, layout, res.grads, stds,
+                                            k_noise, cfg.noise_dtype)
+
+            return _apply_update(cfg, plan, optimizer, trainable_key,
+                                 batch_size, params, opt_state, dp_state,
+                                 noised, counts, thresholds, res.loss, k_q)
+
+    step_fn = named_shard_map(
+        _body, mesh,
+        in_specs=(PS(), PS(), PS(), PS(dax), PS()),
+        out_specs=(PS(), PS(), PS(), PS()))
     return init_fn, step_fn, plan

@@ -131,7 +131,8 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
                          microbatches: int = 8,
                          rwkv_formulation: str = "chunked",
                          debug: bool = False,
-                         moe_dispatch: str | None = None):
+                         moe_dispatch: str | None = None,
+                         sharded: bool = False):
     shape = _shape_for(shape_name, debug)
     variant = LONG_OK.get(arch) if shape_name == "long_500k" else None
     cfg = get_config(arch, reduced=debug, variant=variant)
@@ -151,16 +152,29 @@ def build_train_lowering(arch: str, shape_name: str, mesh, *,
     from repro.launch.mesh import data_axes
     if clipping == "per_shard_resolved":
         clipping = "per_layer"
+    assign, nsuper = None, None
+    if clipping.startswith("per_group") and not sharded:
+        # per-DEVICE supergroups from model-axis shard ownership — the SAME
+        # helper the sharded executing path and bench_sharded use (under
+        # `sharded` the factory derives this from the mesh itself)
+        from repro.launch.sharding import group_shard_assignment
+        nsuper = int(mesh.shape["model"])
+        assign = group_shard_assignment(model.layout, nsuper)
     # backend="xla": dry-run lowering must stay on the reference paths (a
     # TPU pallas custom-call cannot lower on the CPU backend used here).
+    # sharded: shard_map splits the batch manually, so the GSPMD microbatch
+    # pin (batch_axes) does not apply inside the manual region.
     dpc = DPConfig(mode=clipping, sigma=1.0, sampling_rate=1e-3,
                    steps=1000, adaptive=True, init_threshold=1.0,
                    microbatches=microbatches, execution=execution,
-                   batch_axes=data_axes(mesh), backend="xla")
+                   group_assignment=assign, num_supergroups=nsuper,
+                   batch_axes=None if sharded else data_axes(mesh),
+                   backend="xla")
     init_fn, step_fn, plan = make_dp_train_step(
         model.loss_fn, getattr(model, "dp_spec", model.spec), model.layout,
         optim.adam(1e-4), dpc, batch_size=shape.global_batch,
-        trainable_key=getattr(model, "trainable_key", None))
+        trainable_key=getattr(model, "trainable_key", None),
+        mesh=mesh if sharded else None)
 
     params_abs = abstract_params(model.spec)
     opt_abs, dp_abs = jax.eval_shape(init_fn, params_abs)
@@ -250,6 +264,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             microbatches: int | None = None, debug: bool = False,
             ghost_outer_cap: int | None = None,
             moe_dispatch: str | None = None,
+            sharded: bool = False,
             tag: str = "") -> dict:
     shape = _shape_for(shape_name, debug)
     if shape_name == "long_500k" and arch not in LONG_OK:
@@ -288,7 +303,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                 arch, shape_name, mesh, clipping=clipping,
                 execution=execution, microbatches=mb,
                 rwkv_formulation=rwkv_formulation, debug=debug,
-                moe_dispatch=moe_dispatch)
+                moe_dispatch=moe_dispatch, sharded=sharded)
         else:
             lowered, model, cfg = build_serve_lowering(arch, shape_name, mesh,
                                                        debug=debug)
@@ -321,11 +336,24 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         trip = _layer_trip(cfg)
         bw_passes = (backward_passes(hlo, trip)
                      if kind == "train" and trip >= 2 else None)
+        axis_coll = None
+        if sharded and kind == "train":
+            from repro.launch.hlo_analysis import (classify_collectives,
+                                                   filter_model_norm_rows,
+                                                   summarize_axis_rows)
+            rows = classify_collectives(hlo, mesh)  # parse the HLO once
+            axis_coll = {
+                "by_axis": summarize_axis_rows(rows),
+                "model_axis_norm_count": sum(
+                    r["count"] for r in filter_model_norm_rows(rows)),
+            }
         result = {
             "arch": arch, "shape": shape_name, "mesh": mesh_kind,
             "kind": kind, "clipping": clipping if kind == "train" else None,
             "execution": execution if kind == "train" else None,
+            "sharded": sharded if kind == "train" else None,
             "backward_passes": bw_passes,
+            "collectives_by_axis": axis_coll,
             "status": "ok",
             "num_params": model.num_params,
             "num_groups": model.layout.num_groups,
@@ -354,6 +382,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         suffix = "" if clipping == "per_layer" else f"__{clipping}"
         if execution != "bk":
             suffix += f"__{execution}"
+        if sharded:
+            suffix += "__sharded"
         if tag:
             suffix += f"__{tag}"
         fn = os.path.join(
@@ -375,6 +405,11 @@ def main() -> int:
                          "backprop + book-keeping epilogue) or twopass "
                          "(reference two-backward driver)")
     ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--sharded", action="store_true",
+                    help="lower the shard_map executing path (manual-SPMD "
+                         "clipping engine) instead of the GSPMD jit; "
+                         "results gain a per-mesh-axis collective "
+                         "breakdown (collectives_by_axis)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -394,6 +429,8 @@ def main() -> int:
         suffix = "" if args.clipping == "per_layer" else f"__{args.clipping}"
         if args.execution != "bk":
             suffix += f"__{args.execution}"
+        if args.sharded:
+            suffix += "__sharded"
         fn = os.path.join(RESULTS_DIR, f"{a}__{s}__{mk}{suffix}.json")
         if args.skip_existing and os.path.exists(fn):
             with open(fn) as f:
@@ -404,7 +441,7 @@ def main() -> int:
         r = run_one(a, s, mk, clipping=args.clipping,
                     execution=args.execution,
                     microbatches=args.microbatches, save=not debug,
-                    debug=debug)
+                    debug=debug, sharded=args.sharded)
         if r["status"] == "ok":
             gb = r["memory"].get("temp_size_in_bytes", 0) / 2**30
             print(f"[ok]   {a:22s} {s:12s} {mk:6s} "

@@ -395,15 +395,8 @@ def backward_passes(text: str, layer_trip: int) -> int:
 _OPNAME = re.compile(r'op_name="([^"]*)"')
 
 
-def collective_breakdown(text: str, top: int = 15) -> list[dict]:
-    """Attribute collective result-bytes to source op_name sites.
-
-    Loop multipliers are applied by locating each collective's enclosing
-    computations through the analyzer's call graph (a site inside the
-    36-layer scan counts 36x). Returns the top sites by total bytes.
-    """
-    an = HloAnalyzer(text)
-    # compute the visit multiplicity of every computation from the entry
+def _comp_multiplicities(an: HloAnalyzer) -> dict[str, float]:
+    """Visit multiplicity of every computation from ENTRY (loop-aware)."""
     mult: dict[str, float] = {}
 
     def visit(comp: str, m: float):
@@ -431,6 +424,18 @@ def collective_breakdown(text: str, top: int = 15) -> list[dict]:
                     visit(cm2.group(1), m)
 
     visit(an.entry, 1.0)
+    return mult
+
+
+def collective_breakdown(text: str, top: int = 15) -> list[dict]:
+    """Attribute collective result-bytes to source op_name sites.
+
+    Loop multipliers are applied by locating each collective's enclosing
+    computations through the analyzer's call graph (a site inside the
+    36-layer scan counts 36x). Returns the top sites by total bytes.
+    """
+    an = HloAnalyzer(text)
+    mult = _comp_multiplicities(an)
     sites: dict[tuple[str, str], dict] = {}
     for comp, instrs in an.comps.items():
         m = mult.get(comp, 0.0)
@@ -454,3 +459,157 @@ def collective_breakdown(text: str, top: int = 15) -> list[dict]:
     rows = [{"kind": k[0], "site": k[1], **v} for k, v in sites.items()]
     rows.sort(key=lambda r: -r["bytes"])
     return rows[:top]
+
+
+# ---------------------------------------------------------------------------
+# Axis classification: WHICH mesh axes does each collective cross?
+#
+# The paper's per-device-clipping claim (Sec 4) is an axis statement: flat
+# clipping moves per-example norm information across the MODEL axis; per-
+# device clipping must not. Post-SPMD collectives carry `replica_groups`
+# (flat device-id groups), so given the mesh's device->coordinate map we can
+# decide, per collective, the set of mesh axes along which its groups vary —
+# and tests can assert "zero model-axis collectives in norm computation"
+# from the compiled HLO rather than assume it.
+# ---------------------------------------------------------------------------
+
+_REPLICA_GROUPS = re.compile(
+    r"replica_groups=(\{\}|\{\{[\d,{} ]*\}\}|\[[\d,]+\]<=\[[\d,]+\]"
+    r"(?:T\([\d,]+\))?)")
+_SOURCE_TARGET = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)*)\}")
+_PAIR = re.compile(r"\{(\d+),(\d+)\}")
+_IOTA_RG = re.compile(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def mesh_device_coords(mesh) -> dict[int, tuple[int, ...]]:
+    """device id -> mesh coordinates, read off the mesh's device array
+    (robust to non-row-major physical orderings)."""
+    import numpy as np
+    coords: dict[int, tuple[int, ...]] = {}
+    for idx in np.ndindex(*mesh.devices.shape):
+        coords[int(mesh.devices[idx].id)] = tuple(int(i) for i in idx)
+    return coords
+
+
+def _parse_replica_groups(s: str, n_devices: int) -> list[list[int]] | None:
+    """Flat device-id groups from either HLO replica_groups syntax."""
+    import numpy as np
+    if s == "{}":
+        return [list(range(n_devices))]
+    if s.startswith("{{"):
+        return [[int(x) for x in grp.split(",") if x]
+                for grp in re.findall(r"\{([\d, ]+)\}", s.replace(" ", ""))]
+    m = _IOTA_RG.match(s)
+    if not m:  # unknown format: caller treats as spanning everything
+        return None
+    gshape = [int(d) for d in m.group(1).split(",")]
+    dims = [int(d) for d in m.group(2).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(3):
+        ids = ids.transpose([int(p) for p in m.group(3).split(",")])
+    return ids.reshape(gshape[0], -1).tolist()
+
+
+def _axes_of_groups(groups: list[list[int]], coords: dict,
+                    axis_names: tuple) -> tuple[str, ...]:
+    """Mesh axes along which membership varies within any group."""
+    spanned = set()
+    for grp in groups:
+        if len(grp) < 2:
+            continue
+        base = coords.get(grp[0])
+        if base is None:
+            return tuple(axis_names)  # ids outside the mesh: assume global
+        for gid in grp[1:]:
+            c = coords.get(gid)
+            if c is None:
+                return tuple(axis_names)
+            for a, (x, y) in enumerate(zip(base, c)):
+                if x != y:
+                    spanned.add(axis_names[a])
+    return tuple(a for a in axis_names if a in spanned)
+
+
+def classify_collectives(text: str, mesh) -> list[dict]:
+    """Per-site collective rows with the mesh axes each one crosses.
+
+    Returns [{kind, site, axes: tuple[str,...], count, bytes}], loop-
+    multiplied like `collective_breakdown`. `site` is the trimmed op_name
+    (jax name_stack), so engine-inserted collectives wrapped in
+    `jax.named_scope(...)` are attributable (e.g. 'flat_norm_psum').
+    An unparsable replica_groups conservatively spans every axis.
+    """
+    coords = mesh_device_coords(mesh)
+    axis_names = tuple(mesh.axis_names)
+    n_dev = len(coords)
+    an = HloAnalyzer(text)
+    mult = _comp_multiplicities(an)
+    sites: dict[tuple, dict] = {}
+    for comp, instrs in an.comps.items():
+        m = mult.get(comp, 0.0)
+        if m == 0:
+            continue
+        for ins in instrs:
+            base = ins.op.replace("-start", "")
+            if base not in {"all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute"}:
+                continue
+            if ins.op.endswith("-done"):
+                continue
+            if base == "collective-permute":
+                pm = _SOURCE_TARGET.search(ins.rest)
+                groups = ([[int(a), int(b)] for a, b in
+                           _PAIR.findall(pm.group(1))] if pm else None)
+            else:
+                gm = _REPLICA_GROUPS.search(ins.rest)
+                groups = (_parse_replica_groups(gm.group(1), n_dev)
+                          if gm else None)
+            axes = (tuple(axis_names) if groups is None
+                    else _axes_of_groups(groups, coords, axis_names))
+            nm = _OPNAME.search(ins.rest)
+            site = nm.group(1) if nm else "<unattributed>"
+            site = site.split("jit(step_fn)/")[-1][:160]
+            key = (base, axes, site)
+            slot = sites.setdefault(key, {"bytes": 0.0, "count": 0.0})
+            slot["bytes"] += m * _shape_bytes(ins.shape)
+            slot["count"] += m
+    rows = [{"kind": k[0], "axes": k[1], "site": k[2], **v}
+            for k, v in sites.items()]
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows
+
+
+def summarize_axis_rows(rows: list[dict]) -> dict:
+    """Aggregate `classify_collectives` rows to {axes-key: {count, bytes}}.
+
+    Keys are '+'-joined spanned axes ('model', 'data', 'data+model', ...)
+    or 'intra' for degenerate single-device groups — the shape consumed by
+    BENCH_sharded.json and the zero-model-norm-traffic assertions.
+    """
+    out: dict[str, dict] = {}
+    for r in rows:
+        key = "+".join(r["axes"]) or "intra"
+        slot = out.setdefault(key, {"count": 0.0, "bytes": 0.0})
+        slot["count"] += r["count"]
+        slot["bytes"] += r["bytes"]
+    return out
+
+
+def filter_model_norm_rows(rows: list[dict], *,
+                           model_axis: str = "model") -> list[dict]:
+    """Rows that BOTH cross the model axis AND belong to norm computation
+    (site mentions 'norm' — the engine names its norm psums via
+    `jax.named_scope`). Per-device clipping must yield []; flat clipping
+    pays exactly its (B,) total-norm psum here."""
+    return [r for r in rows
+            if model_axis in r["axes"] and "norm" in r["site"].lower()]
+
+
+def collective_axis_summary(text: str, mesh) -> dict:
+    return summarize_axis_rows(classify_collectives(text, mesh))
+
+
+def model_axis_norm_collectives(text: str, mesh, *,
+                                model_axis: str = "model") -> list[dict]:
+    return filter_model_norm_rows(classify_collectives(text, mesh),
+                                  model_axis=model_axis)

@@ -30,3 +30,17 @@ def make_debug_mesh(data: int = 2, model: int = 2, *, pod: int = 0):
     if pod:
         return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def named_shard_map(f, mesh, *, in_specs, out_specs):
+    """`shard_map` across jax versions (manual SPMD, no replication check).
+
+    The sharded DP train step relies on values that ARE replicated but that
+    the checker cannot prove so (masked per-shard contributions joined by a
+    psum), hence check_rep/check_vma off."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -3,6 +3,13 @@
 CPU demo at reduced scale; the identical serve_step lowers on the
 production mesh (see launch.dryrun decode shapes).
 
+Prefill is FUSED by default: the whole prompt is consumed by one jitted
+`lax.scan` over positions — a single XLA dispatch that builds the decode
+cache, instead of P eager `serve_step` dispatches each paying a python
+round-trip (the perf extension previously flagged here). The historical
+token-at-a-time loop stays behind `--prefill loop` as the reference path
+(same math, same cache; only the dispatch granularity differs).
+
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \\
       --batch 4 --prompt-len 16 --gen 32
 """
@@ -20,17 +27,37 @@ from repro.core.spec import init_params
 from repro.models.transformer import build_model
 
 
-def greedy_decode(model, params, prompts: jnp.ndarray, gen: int,
-                  cache_len: int):
-    """prompts: (B, P) int32. Prefill by stepping tokens one at a time
-    (decode-path prefill keeps one code path; a fused prefill is the
-    serve-side perf extension tracked in EXPERIMENTS.md)."""
-    b, p = prompts.shape
+def fused_prefill(model, params, prompts: jnp.ndarray, cache_len: int):
+    """One jitted scan over the prompt: returns (last logits, filled cache).
+
+    Call through `jax.jit` (see `greedy_decode`): the P decode steps fuse
+    into one dispatch whose cache round-trips stay on device.
+    """
+    b = prompts.shape[0]
     cache = model.init_cache(b, cache_len)
+
+    def step(cache, tok):
+        logits, cache = model.serve_step(params, cache, {"token": tok[:, None]})
+        return cache, logits
+
+    cache, logits = jax.lax.scan(step, cache, prompts.T)  # scan over P
+    return logits[-1], cache
+
+
+def greedy_decode(model, params, prompts: jnp.ndarray, gen: int,
+                  cache_len: int, *, prefill: str = "fused"):
+    """prompts: (B, P) int32. prefill: 'fused' (single jitted scan) or
+    'loop' (reference: one dispatch per token)."""
+    b, p = prompts.shape
     step = jax.jit(model.serve_step)
-    logits = None
-    for t in range(p):
-        logits, cache = step(params, cache, {"token": prompts[:, t:t + 1]})
+    if prefill == "fused":
+        pf = jax.jit(lambda pr, ps: fused_prefill(model, ps, pr, cache_len))
+        logits, cache = pf(prompts, params)
+    else:
+        cache = model.init_cache(b, cache_len)
+        logits = None
+        for t in range(p):
+            logits, cache = step(params, cache, {"token": prompts[:, t:t + 1]})
     out = []
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     for _ in range(gen):
@@ -47,6 +74,9 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--prefill", default="fused", choices=["fused", "loop"],
+                    help="fused: single jitted scan over the prompt (one "
+                         "dispatch); loop: reference token-at-a-time path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -58,11 +88,12 @@ def main():
                                  cfg.vocab_size)
     t0 = time.time()
     toks = greedy_decode(model, params, prompts,
-                         args.gen, args.prompt_len + args.gen + 8)
+                         args.gen, args.prompt_len + args.gen + 8,
+                         prefill=args.prefill)
     wall = time.time() - t0
     total = args.batch * (args.prompt_len + args.gen)
-    print(f"# arch={cfg.name} batch={args.batch} generated "
-          f"{args.gen} tokens/seq in {wall:.2f}s "
+    print(f"# arch={cfg.name} batch={args.batch} prefill={args.prefill} "
+          f"generated {args.gen} tokens/seq in {wall:.2f}s "
           f"({total / wall:.1f} tok/s incl. prefill)")
     print(np.asarray(toks)[:, :16])
     return 0

@@ -22,7 +22,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as PS
 
-from repro.core.spec import P, SpecTree
+from repro.core.spec import P, SpecTree, _walk
 from repro.launch.mesh import data_axes
 
 # pattern -> (axis_from_end, kind); kind: 'dim' shard that axis on model,
@@ -95,6 +95,61 @@ def _spec_for(path: str, p: P, model_size: int) -> PS:
                 return PS(*out)
             return PS()
     return PS()  # default: replicate (norm scales, small vectors)
+
+
+def group_shard_assignment(layout, model_size: int) -> tuple[int, ...]:
+    """Map every flat clipping group to its owning model-axis shard.
+
+    This is what makes `per_group` clipping mean PER-DEVICE clipping (paper
+    Sec 4): supergroup s = "everything shard s owns", so each shard's norm
+    reductions and clip factors close over shard-local groups only. Shared
+    by `launch/train.py`, `launch/dryrun.py` and `benchmarks/bench_sharded`
+    so the CLI, the lowering sweep and the executing sharded engine all
+    agree on the partition. Ownership is derived from the SAME rule table
+    that places the parameters (`_RULES`):
+
+      * blocked groups (`P.blocks == model_size`) whose weight is
+        column-parallel: block j lives on shard j — exact Megatron
+        ownership, norm stays on the shard that holds the columns;
+      * stacked groups (scanned layer runs): layer l -> shard
+        l * model_size // L — contiguous pipeline-stage ownership (the
+        paper's GPT-3 recipe partitions by pipeline stage);
+      * singleton groups (embed / head / final norm / replicated scales):
+        deterministic round-robin in sorted-name order, balancing the
+        bookkeeping across shards.
+
+    Returns a tuple of ints in [0, model_size) of length
+    `layout.num_groups`, directly usable as `DPConfig.group_assignment`
+    (with `num_supergroups=model_size`: a shard may own nothing).
+    """
+    spec = layout._spec
+    leaves_by_group: dict[str, list] = {}
+    for path, p in _walk(spec):
+        leaves_by_group.setdefault(layout._leaf_group[path], []).append(
+            (path, p))
+    assign = np.zeros(layout.num_groups, dtype=np.int64)
+    rr = 0  # round-robin counter for singleton groups
+    for g in layout.groups:
+        members = leaves_by_group.get(g.name, [])
+        # primary leaf: the largest member (the weight, not the bias)
+        path, p = max(members, key=lambda kv: int(
+            np.prod(kv[1].shape, dtype=np.int64)))
+        ps = _spec_for("/".join(path), p, model_size)
+        axes = list(ps) + [None] * (len(p.shape) - len(ps))
+        col_parallel = bool(axes) and axes[-1] == "model"
+        ids = np.arange(g.count, dtype=np.int64)
+        if g.count == 1:
+            assign[g.offset] = rr % model_size
+            rr += 1
+            continue
+        if p.blocks == model_size and p.blocks > 1 and col_parallel:
+            # stack_shape ends in the block dim: element (.., j) -> shard j
+            owners = ids % model_size
+        else:
+            first = g.stack_shape[0]
+            owners = (ids // max(g.count // first, 1)) * model_size // first
+        assign[g.offset: g.offset + g.count] = owners % model_size
+    return tuple(int(a) for a in assign)
 
 
 def params_shardings(spec: SpecTree, mesh, *, serving: bool = False) -> Any:

@@ -25,12 +25,21 @@ from repro.data import PoissonSampler, SyntheticLM, make_lm_batch, pack_document
 from repro.models.transformer import build_model
 
 
+def parse_mesh(arg: str | None):
+    """'--mesh DxM' -> a (data, model) mesh over the first D*M devices."""
+    if not arg:
+        return None
+    d, m = (int(x) for x in arg.lower().split("x"))
+    return jax.make_mesh((d, m), ("data", "model"))
+
+
 def build_everything(args):
     cfg = get_config(args.arch, reduced=args.reduced, variant=args.variant)
     if args.lora_rank:
         import dataclasses
         cfg = dataclasses.replace(cfg, lora_rank=args.lora_rank)
     model = build_model(cfg)
+    mesh = parse_mesh(args.mesh)
 
     src = SyntheticLM(vocab_size=cfg.vocab_size, num_docs=args.docs,
                       doc_len=args.seq * 2, seed=0)
@@ -39,16 +48,20 @@ def build_everything(args):
                              rate=args.batch / rows.shape[0],
                              max_batch=args.batch, seed=1)
 
-    assign = None
-    if args.clipping.startswith("per_group"):
-        # per-device analogue: contiguous equal split of the layout groups
-        # into --group-count supergroups (pipeline stages / model shards)
-        k = model.layout.num_groups
-        gc = min(args.group_count, k)
-        assign = tuple(i * gc // k for i in range(k))
+    assign, nsuper = None, None
+    if args.clipping.startswith("per_group") and mesh is None:
+        # per-device semantics without a mesh: supergroup s = "what model
+        # shard s would own" under the SAME ownership rule the sharded
+        # engine and benchmarks use (launch.sharding); --group-count picks
+        # the virtual shard count. (With --mesh the sharded factory derives
+        # the assignment from the mesh itself.)
+        from repro.launch.sharding import group_shard_assignment
+        nsuper = args.group_count or 2
+        assign = group_shard_assignment(model.layout, nsuper)
     dpc = DPConfig(
         mode=args.clipping,
         group_assignment=assign,
+        num_supergroups=nsuper,
         epsilon=args.epsilon if args.sigma is None else None,
         sigma=args.sigma, delta=args.delta,
         sampling_rate=args.batch / rows.shape[0], steps=args.steps,
@@ -71,8 +84,8 @@ def build_everything(args):
     init_fn, step_fn, plan = make_dp_train_step(
         model.loss_fn, getattr(model, "dp_spec", model.spec), model.layout,
         opt, dpc, batch_size=args.batch,
-        trainable_key=getattr(model, "trainable_key", None))
-    return cfg, model, rows, sampler, init_fn, step_fn, plan
+        trainable_key=getattr(model, "trainable_key", None), mesh=mesh)
+    return cfg, model, rows, sampler, init_fn, step_fn, plan, mesh
 
 
 def main():
@@ -103,9 +116,20 @@ def main():
     ap.add_argument("--quantile", type=float, default=0.5)
     ap.add_argument("--quantile-budget", type=float, default=0.01)
     ap.add_argument("--noise-strategy", default="global")
-    ap.add_argument("--group-count", type=int, default=2,
-                    help="per_group clipping: number of supergroups "
-                         "(contiguous equal split of the layout groups)")
+    ap.add_argument("--group-count", type=int, default=None,
+                    help="per_group clipping without --mesh: number of "
+                         "virtual model shards whose ownership defines the "
+                         "supergroups (launch.sharding."
+                         "group_shard_assignment; default 2). With --mesh "
+                         "the assignment always comes from the mesh.")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="execute the step under shard_map on a "
+                         "(data=D, model=M) mesh (e.g. 2x4; needs D*M "
+                         "devices — on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8). "
+                         "Batch shards over data; params are STORED "
+                         "model-sharded per launch.sharding rules; "
+                         "per_group becomes true per-device clipping.")
     ap.add_argument("--backend", default="auto",
                     choices=["xla", "pallas", "auto"],
                     help="ghost-op engine (repro.kernels.backend): xla "
@@ -117,17 +141,30 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    cfg, model, rows, sampler, init_fn, step_fn, plan = build_everything(args)
+    (cfg, model, rows, sampler, init_fn, step_fn, plan,
+     mesh) = build_everything(args)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
     opt_state, dp_state = init_fn(params)
     # donate params/opt_state/dp_state: they update in place every step, so
     # XLA aliases them input->output instead of double-buffering the model
-    step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    if mesh is not None:
+        # weights are STORED model-sharded between steps (memory: 1/M per
+        # device); the shard_map entry all-gathers them — weight traffic,
+        # classified separately from norm traffic by hlo_analysis
+        from repro.launch.sharding import params_shardings
+        pshard = params_shardings(model.spec, mesh)
+        step = jax.jit(step_fn,
+                       in_shardings=(pshard, None, None, None, None),
+                       out_shardings=(pshard, None, None, None),
+                       donate_argnums=(0, 1, 2))
+    else:
+        step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
     key = jax.random.PRNGKey(args.seed + 1)
 
     print(f"# arch={cfg.name} params={model.num_params:,} "
           f"groups={model.layout.num_groups} mode={plan.config.mode} "
           f"backend={plan.config.backend} "
+          f"mesh={dict(mesh.shape) if mesh is not None else None} "
           f"sigma={plan.sigma:.3f} sigma_new={plan.sigma_new:.3f} "
           f"sigma_b={plan.sigma_b:.3f}")
     t_start = time.time()

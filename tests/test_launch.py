@@ -104,3 +104,21 @@ def test_dryrun_debug_mesh_subprocess():
     for r in rs:
         assert r["status"] == "ok", r
         assert r["flops"] > 0
+
+
+@pytest.mark.parametrize("arch", ["tiny", "rwkv6-7b"])
+def test_fused_prefill_matches_loop_prefill(arch):
+    """serve.py's single-jitted-scan prefill must generate EXACTLY what the
+    token-at-a-time reference path does (same cache, same logits), for both
+    KV-cache attention and recurrent-state archs."""
+    from repro.core.spec import init_params
+    from repro.launch.serve import greedy_decode
+    from repro.models.transformer import build_model
+    cfg = get_config(arch, reduced=(arch != "tiny"))
+    model = build_model(cfg)
+    params = init_params(model.spec, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0,
+                                 cfg.vocab_size)
+    want = greedy_decode(model, params, prompts, 6, 24, prefill="loop")
+    got = greedy_decode(model, params, prompts, 6, 24, prefill="fused")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
