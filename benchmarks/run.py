@@ -10,6 +10,8 @@ Mapping to the paper:
   fig5/6_*     Figures 5/6, Table 10 — quantile & allocation ablations
   kernel_*     ghost-norm op microbenches (Sec 3.1 fused op)
   roofline_*   EXPERIMENTS.md §Roofline (from the multi-pod dry-run)
+  serve_*      beyond-paper: slot-pool continuous-batching serving engine
+               vs dispatch-per-token loops (occupancy + arrival sweeps)
 
 Every suite that persists measurements writes a ``BENCH_*.json`` artifact
 next to this file; after the suites run, ``aggregate()`` folds them all
@@ -67,12 +69,13 @@ def main() -> None:
         return
 
     from benchmarks import (bench_epochs, bench_kernels, bench_quantile,
-                            bench_scaling, bench_sharded, bench_throughput,
-                            bench_utility, roofline)
+                            bench_scaling, bench_serve, bench_sharded,
+                            bench_throughput, bench_utility, roofline)
     suites = [
         ("throughput", bench_throughput),
         ("kernels", bench_kernels),
         ("sharded", bench_sharded),
+        ("serve", bench_serve),
         ("utility", bench_utility),
         ("epochs", bench_epochs),
         ("quantile", bench_quantile),

@@ -1,5 +1,8 @@
-"""Batched serving demo: greedy decode with the KV/state cache across
-architecture families (GQA cache, MLA latent cache, SSM O(1) state).
+"""Continuous-batching serving demo: a ragged request stream through the
+slot-pool DecodeEngine, across architecture families (GQA KV cache, MLA
+latent cache, SSM O(1) recurrent state). Four requests share three slots,
+so the last one is admitted MID-FLIGHT into a recycled slot; every output
+is token-for-token what the request would produce alone, unpadded.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -10,19 +13,26 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.spec import init_params
-from repro.launch.serve import greedy_decode
+from repro.launch.engine import DecodeEngine
+from repro.launch.inputs import synthetic_requests
+
 from repro.models.transformer import build_model
 
 for arch in ("qwen3-4b", "deepseek-v3-671b", "rwkv6-7b"):
     cfg = get_config(arch, reduced=True)
     model = build_model(cfg)
     params = init_params(model.spec, jax.random.PRNGKey(0))
-    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
-                                 cfg.vocab_size)
+    reqs = synthetic_requests(cfg.vocab_size, 4, min_len=2, max_len=8,
+                              seed=1)
     t0 = time.time()
-    toks = greedy_decode(model, params, prompts, gen=24, cache_len=64)
+    engine = DecodeEngine(model, params, num_slots=3, cache_len=64)
+    rids = [engine.submit(r, max_new_tokens=24) for r in reqs]
+    done = engine.run()
     dt = time.time() - t0
     kind = {"gqa": "KV cache", "mla": "MLA latent cache",
             "none": "recurrent state"}[cfg.attention_kind]
-    print(f"{arch:20s} [{kind:16s}] 4x24 tokens in {dt:5.2f}s  "
-          f"sample: {np.asarray(toks)[0, :8].tolist()}")
+    stats = engine.stats
+    print(f"{arch:20s} [{kind:16s}] lens={[len(r) for r in reqs]} "
+          f"4x24 tokens over 3 slots in {dt:5.2f}s "
+          f"({stats['decode_dispatches']} decode dispatches)  "
+          f"sample: {done[rids[0]].tokens[:8]}")

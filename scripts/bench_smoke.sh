@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # Perf smoke: the Figure-1 throughput bench on the tiny config, covering
-# BOTH executions of the flat/group clipping modes (bk vs twopass).
-# Writes benchmarks/BENCH_throughput.json and refreshes the cross-PR
-# aggregate benchmarks/BENCH_summary.json.
+# BOTH executions of the flat/group clipping modes (bk vs twopass), plus
+# the serving-engine bench (slot-pool continuous batching vs the
+# dispatch-per-token loop — --smoke ASSERTS the engine wins at 4 slots).
+# Writes benchmarks/BENCH_throughput.json + BENCH_serve.json and
+# refreshes the cross-PR aggregate benchmarks/BENCH_summary.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m benchmarks.bench_throughput
+python -m benchmarks.bench_serve --smoke
 python -m benchmarks.run --aggregate-only

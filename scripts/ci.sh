@@ -9,6 +9,16 @@ cd "$(dirname "$0")"
     tests/test_sharded.py::test_sharded_engine_checks_subprocess
 ./bench_smoke.sh
 
+# ---- serving-engine smoke: ragged request set served through the slot
+# pool on CPU, with fewer slots than requests so admission happens
+# MID-FLIGHT into recycled slots (parity vs the oracle is asserted by
+# tests/test_engine.py in the tier-1 stage above; this exercises the CLI).
+cd ..
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
+        --slots 3 --prompt-len 12 --min-prompt-len 3 --gen 16
+cd scripts
+
 # ---- sharded stage: the multi-device engine on 8 virtual CPU devices ----
 # Runs the full sharded check suite (parity + the zero-model-axis-norm-
 # collectives HLO assertion) with the forced device count, then a quick

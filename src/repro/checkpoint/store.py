@@ -104,8 +104,18 @@ def save_checkpoint(directory: str, step: int, tree,
     return path
 
 
-def load_checkpoint(directory: str, step: int, template):
-    """Restore into the structure of `template` (shapes must match)."""
+def load_checkpoint(directory: str, step: int, template, *, shardings=None):
+    """Restore into the structure of `template` (shapes must match).
+
+    shardings: optional pytree mirroring `template` leaf-for-leaf whose
+    leaves are `jax.sharding.Sharding`s (or None to leave that leaf on the
+    default device). Each restored leaf is `device_put` with its target
+    sharding — the model-sharded-params resume path of
+    `launch.train --mesh DxM`, asserted bitwise by
+    tests/sharded_checks.py's checkpoint round-trip check. Build it with
+    e.g. ``{"params": params_shardings(spec, mesh), "opt": tree of None}``
+    (``jax.tree_util.tree_map(lambda _: None, subtree)``).
+    """
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
         manifest = msgpack.unpackb(f.read())
@@ -134,6 +144,16 @@ def load_checkpoint(directory: str, step: int, template):
         raise ValueError(
             f"checkpoint has {len(leaves)} leaves, template expects "
             f"{treedef.num_leaves}")
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(
+            shardings,
+            is_leaf=lambda x: x is None or isinstance(x, jax.sharding.Sharding))
+        if len(sh_leaves) != len(leaves):
+            raise ValueError(
+                f"shardings tree has {len(sh_leaves)} leaves, checkpoint "
+                f"has {len(leaves)} — mirror the template leaf-for-leaf")
+        leaves = [l if s is None else jax.device_put(l, s)
+                  for l, s in zip(leaves, sh_leaves)]
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 

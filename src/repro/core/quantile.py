@@ -66,8 +66,26 @@ def update_thresholds(
     counts: jax.Array,
     batch_size: jax.Array | int,
     key: jax.Array,
+    *,
+    counts_axes=None,
 ) -> QuantileState:
-    """One private geometric update of all K thresholds (Alg. 1 l.15-17)."""
+    """One private geometric update of all K thresholds (Alg. 1 l.15-17).
+
+    Sharded-execution contract: there is exactly ONE geometric update per
+    step, fed by the GLOBAL clip counts over the full batch and divided by
+    the GLOBAL batch size. A caller inside `shard_map` that still holds
+    shard-local counts must pass the data-plane mesh axes as
+    `counts_axes` — they are psum'd here before the update — so every
+    shard applies the identical threshold move (the noise draw already
+    agrees across shards because the key is replicated). Callers that
+    hand over pre-reduced counts (core.clipping's sharded drivers do, see
+    their `clip_count_psum` scopes) leave it None.
+    tests/sharded_checks.py asserts this parity against the single-device
+    tracker.
+    """
+    if counts_axes is not None:
+        with jax.named_scope("clip_count_psum"):
+            counts = jax.lax.psum(counts, counts_axes)
     noise = state.sigma_b * jax.random.normal(
         key, state.thresholds.shape, dtype=jnp.float32
     )

@@ -1,0 +1,263 @@
+"""Continuous-batching decode engine over a fixed slot pool.
+
+`DecodeEngine` owns a pre-allocated decode cache of `num_slots` slots
+(the `slot`/`pos` ring algebra of models/attention.py) and serves an
+arbitrary stream of ragged requests through THREE compiled programs whose
+shapes never depend on the traffic — no recompilation as requests come
+and go:
+
+  admission  `_prefill`  — a jitted scan over a fixed-size chunk of
+      `prefill_chunk` prompt positions. Only the slots being admitted are
+      active (length-masked: serve_step's `active` row mask suppresses
+      both the cache write and the position advance, so pad tokens never
+      pollute the pool) while every other slot — mid-decode or idle — is
+      bit-frozen. Each admitted slot's TRUE-last-token logits accumulate
+      in a persistent (S, V) buffer; its argmax is the slot's first
+      output token.
+  decode     `_decode`   — ONE dispatch advances every live slot by one
+      greedy token; retired / free slots ride along masked.
+  recycle    `_reset`    — zeroes the cache rows (KV, ring, recurrent
+      state, position) of slots being handed to a new request, so a
+      recycled slot cannot leak its previous occupant. (For attention
+      caches the `pos -> 0` reset alone masks stale entries via the
+      kpos validity algebra; recurrent state needs the explicit zero.)
+
+Retirement (EOS / max-token) and the request queue are host-side numpy
+bookkeeping over (S,) vectors; every device call has static shapes, so
+the three programs compile exactly once per (model, S, chunk). Output is
+token-for-token identical to running each request alone, unpadded,
+through `launch.serve.greedy_decode(prefill="loop")` — the reference
+oracle asserted by tests/test_engine.py — because active-masked slots are
+bit-frozen and each live slot's math is row-independent.
+
+    engine = DecodeEngine(model, params, num_slots=8, cache_len=128)
+    rid = engine.submit(prompt_tokens, max_new_tokens=32)
+    ...                          # submit more any time, even mid-flight
+    done = engine.run()          # {rid: Completion}
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Completion:
+    """One finished request."""
+
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    finish_reason: str  # "eos" | "length"
+
+
+class DecodeEngine:
+    """Slot-pool continuous-batching greedy decoder (see module doc)."""
+
+    def __init__(self, model, params, *, num_slots: int, cache_len: int,
+                 prefill_chunk: int = 8, eos_id: int | None = None):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.model, self.params = model, params
+        self.num_slots, self.cache_len = num_slots, cache_len
+        self.eos_id = eos_id
+        self._chunk = prefill_chunk
+        cfg = model.cfg
+        # full (non-ring) attention caches hard-bound the horizon; ring /
+        # recurrent caches only carry O(1) or windowed state
+        self._bounded = cfg.attention_kind == "mla" or (
+            cfg.attention_kind == "gqa" and cfg.sliding_window is None)
+
+        self.cache = model.init_cache(num_slots, cache_len)
+        self._last = jnp.zeros((num_slots, cfg.vocab_size), jnp.float32)
+
+        # ---- host-side slot table ----
+        self._rid = np.full((num_slots,), -1, np.int64)
+        self._live = np.zeros((num_slots,), bool)
+        self._gen = np.zeros((num_slots,), np.int64)
+        self._max = np.zeros((num_slots,), np.int64)
+        self._tok = np.zeros((num_slots,), np.int32)  # last emitted token
+        self._queue: collections.deque = collections.deque()
+        self._out: dict[int, list[int]] = {}
+        self._plen: dict[int, int] = {}
+        self._done: dict[int, Completion] = {}
+        self._next_rid = 0
+        self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
+                      "tokens_out": 0, "requests_done": 0}
+
+        # ---- the three compiled programs ----
+        def prefill_fn(params, cache, last, toks, valid):
+            # toks/valid: (S, C); scan over the C chunk positions
+            def stepf(carry, xs):
+                cache, last = carry
+                tok, act = xs
+                logits, cache = model.serve_step(
+                    params, cache, {"token": tok[:, None], "active": act})
+                last = jnp.where(act[:, None], logits.astype(jnp.float32),
+                                 last)
+                return (cache, last), None
+
+            (cache, last), _ = jax.lax.scan(stepf, (cache, last),
+                                            (toks.T, valid.T))
+            return cache, last, jnp.argmax(last, axis=-1).astype(jnp.int32)
+
+        def decode_fn(params, cache, tok, live):
+            logits, cache = model.serve_step(
+                params, cache, {"token": tok[:, None], "active": live})
+            nxt = jnp.argmax(logits.astype(jnp.float32),
+                             axis=-1).astype(jnp.int32)
+            return cache, jnp.where(live, nxt, tok)
+
+        def reset_fn(cache, mask):
+            out = {}
+            for k, v in cache.items():
+                ax = 0 if k == "pos" else 1  # slot axis per cache family
+                m = mask.reshape((1,) * ax + (num_slots,)
+                                 + (1,) * (v.ndim - ax - 1))
+                out[k] = jnp.where(m, jnp.zeros_like(v), v)
+            return out
+
+        self._prefill = jax.jit(prefill_fn, donate_argnums=(1, 2))
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._reset = jax.jit(reset_fn, donate_argnums=(0,))
+
+    # ------------------------------------------------------------------
+    # Public surface.
+    # ------------------------------------------------------------------
+
+    @property
+    def num_free_slots(self) -> int:
+        return int(self.num_slots - self._live.sum())
+
+    @property
+    def num_pending(self) -> int:
+        return len(self._queue)
+
+    @property
+    def num_live(self) -> int:
+        return int(self._live.sum())
+
+    def submit(self, prompt, max_new_tokens: int) -> int:
+        """Enqueue one request; admitted into a free slot at the next
+        `step()`. Returns the request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            raise ValueError(
+                "empty prompt: seed requests with at least one (BOS) token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        if self._bounded and prompt.size + max_new_tokens > self.cache_len:
+            raise ValueError(
+                f"request needs {prompt.size}+{max_new_tokens} cache slots "
+                f"but the pool was sized with cache_len={self.cache_len}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, prompt, int(max_new_tokens)))
+        return rid
+
+    def step(self) -> int:
+        """Admit whatever fits into free slots (chunked prefill), then one
+        pool-wide decode dispatch advancing every live slot. Returns the
+        number of live slots advanced."""
+        self._admit()
+        live_idx = np.nonzero(self._live)[0]
+        if live_idx.size == 0:
+            return 0
+        self.cache, nxt = self._decode(self.params, self.cache,
+                                       jnp.asarray(self._tok),
+                                       jnp.asarray(self._live))
+        self.stats["decode_dispatches"] += 1
+        nxt = np.asarray(nxt)
+        for slot in live_idx:
+            self._emit(int(slot), int(nxt[slot]))
+        return int(live_idx.size)
+
+    def run(self, max_steps: int | None = None) -> dict[int, Completion]:
+        """Drive until the queue and the pool drain — or until `max_steps`
+        pool steps, whichever comes first — and return the completions
+        finished so far (keyed by request id). Callers using `max_steps`
+        as a safety bound can check `num_live` / `num_pending` afterwards
+        to see whether the engine actually drained."""
+        steps = 0
+        while self._queue or self._live.any():
+            if max_steps is not None and steps >= max_steps:
+                break
+            self.step()
+            steps += 1
+        return dict(self._done)
+
+    def completions(self) -> dict[int, Completion]:
+        return dict(self._done)
+
+    # ------------------------------------------------------------------
+    # Internals.
+    # ------------------------------------------------------------------
+
+    def _admit(self):
+        """Move queued requests into free slots: recycle (zero) the slots,
+        then length-masked chunked prefill — one jitted dispatch per chunk
+        of `prefill_chunk` positions, all admitted slots together, every
+        other slot bit-frozen."""
+        free = [s for s in range(self.num_slots) if not self._live[s]]
+        batch = []
+        while free and self._queue:
+            batch.append((free.pop(0),) + tuple(self._queue.popleft()))
+        if not batch:
+            return
+        mask = np.zeros((self.num_slots,), bool)
+        for slot, _, _, _ in batch:
+            mask[slot] = True
+        self.cache = self._reset(self.cache, jnp.asarray(mask))
+
+        c = self._chunk
+        pmax = max(p.size for _, _, p, _ in batch)
+        padded = -(-pmax // c) * c
+        toks = np.zeros((self.num_slots, padded), np.int32)
+        valid = np.zeros((self.num_slots, padded), bool)
+        for slot, _, prompt, _ in batch:
+            toks[slot, : prompt.size] = prompt
+            valid[slot, : prompt.size] = True
+        last = self._last
+        for c0 in range(0, padded, c):
+            self.cache, last, first = self._prefill(
+                self.params, self.cache, last,
+                jnp.asarray(toks[:, c0:c0 + c]),
+                jnp.asarray(valid[:, c0:c0 + c]))
+            self.stats["prefill_dispatches"] += 1
+        self._last = last
+        first = np.asarray(first)
+        for slot, rid, prompt, max_new in batch:
+            self._rid[slot] = rid
+            self._live[slot] = True
+            self._gen[slot] = 0
+            self._max[slot] = max_new
+            self._out[rid] = []
+            self._plen[rid] = int(prompt.size)
+            # the first output token falls out of the prefill itself
+            self._emit(slot, int(first[slot]))
+
+    def _emit(self, slot: int, tok: int):
+        rid = int(self._rid[slot])
+        self._out[rid].append(tok)
+        self._gen[slot] += 1
+        self._tok[slot] = tok
+        self.stats["tokens_out"] += 1
+        if self.eos_id is not None and tok == self.eos_id:
+            self._retire(slot, "eos")
+        elif self._gen[slot] >= self._max[slot]:
+            self._retire(slot, "length")
+
+    def _retire(self, slot: int, reason: str):
+        rid = int(self._rid[slot])
+        self._done[rid] = Completion(rid=rid, prompt_len=self._plen.pop(rid),
+                                     tokens=self._out.pop(rid),
+                                     finish_reason=reason)
+        self._live[slot] = False
+        self._rid[slot] = -1
+        self.stats["requests_done"] += 1

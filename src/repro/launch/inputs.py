@@ -7,6 +7,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
 
@@ -34,6 +35,50 @@ def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
 
 def serve_batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
     return {"token": sds((shape.global_batch, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Ragged request batching (serving): real traffic never arrives as an
+# equal-length batch, so the serving paths take right-padded prompts plus
+# explicit true lengths (launch.serve) or raw per-request token arrays
+# (launch.engine).
+# ---------------------------------------------------------------------------
+
+
+def pad_ragged_prompts(prompts) -> tuple[np.ndarray, np.ndarray]:
+    """Right-pad a list of variable-length prompts into one batch.
+
+    prompts: sequence of 1-D int token sequences (len >= 1 each).
+    Returns (tokens (B, Pmax) int32, lengths (B,) int32). The pad value is
+    0 — it never reaches the cache: the serving paths mask every position
+    >= lengths[i] out of both the cache write and the logit gather.
+    """
+    rows = [np.asarray(p, np.int32).reshape(-1) for p in prompts]
+    if not rows:
+        raise ValueError("empty request set")
+    if any(r.size == 0 for r in rows):
+        raise ValueError("empty prompt in request set: seed with a BOS token")
+    pmax = max(r.size for r in rows)
+    toks = np.zeros((len(rows), pmax), np.int32)
+    lengths = np.zeros((len(rows),), np.int32)
+    for i, r in enumerate(rows):
+        toks[i, : r.size] = r
+        lengths[i] = r.size
+    return toks, lengths
+
+
+def synthetic_requests(vocab_size: int, n: int, *, min_len: int,
+                       max_len: int, seed: int = 0) -> list[np.ndarray]:
+    """n random prompts with lengths uniform in [min_len, max_len] — the
+    ragged request sets used by the serve CLI, the engine smoke and
+    benchmarks/bench_serve.py."""
+    if not 1 <= min_len <= max_len:
+        raise ValueError(f"need 1 <= min_len <= max_len, got "
+                         f"[{min_len}, {max_len}]")
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(min_len, max_len + 1, size=n)
+    return [rng.integers(0, vocab_size, size=int(l)).astype(np.int32)
+            for l in lens]
 
 
 def concrete_train_batch(cfg: ModelConfig, b: int, t: int, key) -> dict:

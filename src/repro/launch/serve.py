@@ -1,17 +1,22 @@
-"""Serving driver: batched greedy decode against the KV/state cache.
+"""Serving driver: ragged-batch greedy decode and the slot-pool engine.
 
-CPU demo at reduced scale; the identical serve_step lowers on the
-production mesh (see launch.dryrun decode shapes).
+Two entry points share the model's `serve_step`:
 
-Prefill is FUSED by default: the whole prompt is consumed by one jitted
-`lax.scan` over positions — a single XLA dispatch that builds the decode
-cache, instead of P eager `serve_step` dispatches each paying a python
-round-trip (the perf extension previously flagged here). The historical
-token-at-a-time loop stays behind `--prefill loop` as the reference path
-(same math, same cache; only the dispatch granularity differs).
+  * `greedy_decode` / `fused_prefill` — the STATIC-batch reference path.
+    Prompts may be right-padded ragged (`lengths=`): pad tokens are
+    length-masked out of the cache (serve_step's `active` row mask) and
+    the first generated token comes from each sequence's TRUE last prompt
+    token, so a ragged batch decodes exactly like each prompt run alone
+    unpadded. Prefill is fused by default (one jitted `lax.scan` over the
+    prompt — a single XLA dispatch); `--prefill loop` keeps the
+    token-at-a-time dispatch loop as the reference oracle.
+  * `launch.engine.DecodeEngine` — continuous batching over a fixed slot
+    pool: requests admitted mid-flight, one dispatch advances all live
+    slots, EOS/max-token retirement and slot recycling. The CLI serves a
+    ragged synthetic request set through it by default (`--mode engine`).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-7b --reduced \\
-      --batch 4 --prompt-len 16 --gen 32
+      --batch 4 --prompt-len 16 --min-prompt-len 4 --gen 32 --slots 3
 """
 from __future__ import annotations
 
@@ -27,37 +32,104 @@ from repro.core.spec import init_params
 from repro.models.transformer import build_model
 
 
-def fused_prefill(model, params, prompts: jnp.ndarray, cache_len: int):
+def fused_prefill(model, params, prompts: jnp.ndarray, cache_len: int,
+                  lengths: jnp.ndarray | None = None):
     """One jitted scan over the prompt: returns (last logits, filled cache).
+
+    prompts: (B, P) right-padded; lengths: optional (B,) true prompt
+    lengths (None means every row uses all P tokens). Pad positions are
+    masked out of the cache and the returned logits are each row's TRUE
+    last-token logits (float32), not `logits[-1]`.
 
     Call through `jax.jit` (see `greedy_decode`): the P decode steps fuse
     into one dispatch whose cache round-trips stay on device.
     """
-    b = prompts.shape[0]
+    b, p = prompts.shape
     cache = model.init_cache(b, cache_len)
+    last0 = jnp.zeros((b, model.cfg.vocab_size), jnp.float32)
 
-    def step(cache, tok):
-        logits, cache = model.serve_step(params, cache, {"token": tok[:, None]})
-        return cache, logits
+    if lengths is None:
+        # equal-length fast path: no row mask, plain cache writes
+        def step(carry, tok):
+            cache, _ = carry
+            logits, cache = model.serve_step(params, cache,
+                                             {"token": tok[:, None]})
+            return (cache, logits.astype(jnp.float32)), None
 
-    cache, logits = jax.lax.scan(step, cache, prompts.T)  # scan over P
-    return logits[-1], cache
+        (cache, last), _ = jax.lax.scan(step, (cache, last0), prompts.T)
+        return last, cache
+
+    def step(carry, xs):
+        cache, last = carry
+        tok, t = xs
+        act = t < lengths
+        logits, cache = model.serve_step(
+            params, cache, {"token": tok[:, None], "active": act})
+        last = jnp.where(act[:, None], logits.astype(jnp.float32), last)
+        return (cache, last), None
+
+    (cache, last), _ = jax.lax.scan(
+        step, (cache, last0),
+        (prompts.T, jnp.arange(p, dtype=jnp.int32)))  # scan over P
+    return last, cache
+
+
+def _jitted(model, key, build):
+    """Per-model cache of jitted serving programs, so repeat greedy_decode
+    calls (examples, benchmarks) re-dispatch instead of re-tracing."""
+    cache = getattr(model, "_serve_jit_cache", None)
+    if cache is None:
+        cache = model._serve_jit_cache = {}
+    if key not in cache:
+        cache[key] = jax.jit(build())
+    return cache[key]
 
 
 def greedy_decode(model, params, prompts: jnp.ndarray, gen: int,
-                  cache_len: int, *, prefill: str = "fused"):
-    """prompts: (B, P) int32. prefill: 'fused' (single jitted scan) or
-    'loop' (reference: one dispatch per token)."""
+                  cache_len: int, *, prefill: str = "fused",
+                  lengths=None):
+    """prompts: (B, P) int32, right-padded if ragged; lengths: optional
+    (B,) true prompt lengths. prefill: 'fused' (single jitted scan) or
+    'loop' (reference oracle: one dispatch per token — same math)."""
     b, p = prompts.shape
-    step = jax.jit(model.serve_step)
+    if p == 0:
+        raise ValueError(
+            "empty prompt (P == 0): greedy_decode needs at least one prompt "
+            "token per sequence — seed requests with a BOS token")
+    step = _jitted(model, "step", lambda: model.serve_step)
     if prefill == "fused":
-        pf = jax.jit(lambda pr, ps: fused_prefill(model, ps, pr, cache_len))
-        logits, cache = pf(prompts, params)
+        if lengths is None:
+            pf = _jitted(
+                model, ("prefill", cache_len),
+                lambda: lambda pr, ps: fused_prefill(model, ps, pr,
+                                                     cache_len))
+            logits, cache = pf(prompts, params)
+        else:
+            ln = jnp.asarray(lengths, jnp.int32)
+            pf = _jitted(
+                model, ("prefill_ragged", cache_len),
+                lambda: lambda pr, l, ps: fused_prefill(model, ps, pr,
+                                                        cache_len, l))
+            logits, cache = pf(prompts, ln, params)
     else:
         cache = model.init_cache(b, cache_len)
-        logits = None
+        logits = jnp.zeros((b, model.cfg.vocab_size), jnp.float32)
+        ln = (None if lengths is None
+              else jnp.asarray(lengths, jnp.int32))
         for t in range(p):
-            logits, cache = step(params, cache, {"token": prompts[:, t:t + 1]})
+            if ln is None:  # equal-length fast path: no row mask
+                lg, cache = step(params, cache,
+                                 {"token": prompts[:, t:t + 1]})
+                logits = lg.astype(jnp.float32)
+                continue
+            act = jnp.full((b,), t, jnp.int32) < ln
+            lg, cache = step(params, cache,
+                             {"token": prompts[:, t:t + 1], "active": act})
+            # true-last-token gather: only rows still inside their prompt
+            # update, so the final value is each row's length-1 logits
+            logits = jnp.where(act[:, None], lg.astype(jnp.float32), logits)
+    if gen <= 0:
+        return jnp.zeros((b, 0), jnp.int32)
     out = []
     tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
     for _ in range(gen):
@@ -71,31 +143,68 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny", choices=ARCH_IDS + ["tiny"])
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests in the synthetic set")
+    ap.add_argument("--prompt-len", type=int, default=16,
+                    help="maximum prompt length")
+    ap.add_argument("--min-prompt-len", type=int, default=None,
+                    help="minimum prompt length (default = --prompt-len, "
+                         "i.e. an equal-length batch; set lower for a "
+                         "ragged request set)")
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--mode", default="engine", choices=["engine", "batch"],
+                    help="engine: continuous-batching slot pool "
+                         "(launch.engine.DecodeEngine); batch: the static "
+                         "padded-batch greedy_decode reference")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="engine slot-pool size (default = --batch)")
     ap.add_argument("--prefill", default="fused", choices=["fused", "loop"],
-                    help="fused: single jitted scan over the prompt (one "
-                         "dispatch); loop: reference token-at-a-time path")
+                    help="batch mode: fused = single jitted scan over the "
+                         "prompt (one dispatch); loop = reference "
+                         "token-at-a-time oracle")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 cfg.vocab_size)
+
+    from repro.launch.inputs import pad_ragged_prompts, synthetic_requests
+    lo = (args.prompt_len if args.min_prompt_len is None
+          else args.min_prompt_len)
+    reqs = synthetic_requests(cfg.vocab_size, args.batch, min_len=lo,
+                              max_len=args.prompt_len, seed=1)
+    cache_len = args.prompt_len + args.gen + 8
+
     t0 = time.time()
-    toks = greedy_decode(model, params, prompts,
-                         args.gen, args.prompt_len + args.gen + 8,
-                         prefill=args.prefill)
-    wall = time.time() - t0
-    total = args.batch * (args.prompt_len + args.gen)
-    print(f"# arch={cfg.name} batch={args.batch} prefill={args.prefill} "
+    if args.mode == "engine":
+        from repro.launch.engine import DecodeEngine
+        num_slots = args.batch if args.slots is None else args.slots
+        eng = DecodeEngine(model, params, num_slots=num_slots,
+                           cache_len=cache_len)
+        for r in reqs:
+            eng.submit(r, max_new_tokens=args.gen)
+        done = eng.run()
+        wall = time.time() - t0
+        toks = np.full((args.batch, args.gen), -1, np.int32)
+        for rid, c in done.items():
+            toks[rid, :len(c.tokens)] = c.tokens
+        extra = (f"slots={eng.num_slots} "
+                 f"dispatches={eng.stats['decode_dispatches']}d"
+                 f"+{eng.stats['prefill_dispatches']}p")
+    else:
+        prompts, lengths = pad_ragged_prompts(reqs)
+        toks = np.asarray(greedy_decode(
+            model, params, jnp.asarray(prompts), args.gen, cache_len,
+            prefill=args.prefill, lengths=jnp.asarray(lengths)))
+        wall = time.time() - t0
+        extra = f"prefill={args.prefill}"
+    total = sum(len(r) for r in reqs) + args.batch * args.gen
+    print(f"# arch={cfg.name} mode={args.mode} batch={args.batch} "
+          f"prompt_lens={[len(r) for r in reqs]} {extra} "
           f"generated {args.gen} tokens/seq in {wall:.2f}s "
           f"({total / wall:.1f} tok/s incl. prefill)")
-    print(np.asarray(toks)[:, :16])
+    print(toks[:, :16])
     return 0
 
 

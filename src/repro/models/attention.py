@@ -16,6 +16,15 @@ Decode paths:
     optimization recorded in EXPERIMENTS.md.
 
 All projections are DP primitives (clip-in-backprop).
+
+Serving hooks: every decode entry point takes an optional `active` (B,)
+row mask — the per-slot write/retire hook of the continuous-batching
+engine (launch.engine). Rows with `active=False` leave their cache slot
+bit-identical and do not advance their position, so a slot-pool step can
+carry retired / still-prefilling / empty slots through the same dispatch
+without polluting their state. `masked_state` is the matching hook for
+recurrent caches (Mamba conv/ssm, RWKV wkv), whose whole state tensor
+turns over every step.
 """
 from __future__ import annotations
 
@@ -34,6 +43,33 @@ _SINGLE_SHOT_MAX = 2048 * 2048  # T*S above this -> blocked attention
 _QB, _KB = 512, 1024  # query/kv block sizes for the blocked path
 
 NEG_INF = -1e30
+
+
+def masked_state(active, new, old):
+    """Row-freeze hook for recurrent decode caches: keep `old` state on
+    rows where `active` is False. `active=None` means every row advances
+    (the non-serving fast path — no select is emitted at all)."""
+    if active is None:
+        return new
+    m = active.reshape((active.shape[0],) + (1,) * (new.ndim - 1))
+    return jnp.where(m, new, old)
+
+
+def _masked_cache_write(cache, new, slot, active):
+    """Per-row dynamic-slice write into a (B, S, ...) cache at `slot`,
+    suppressed (read-modify-write of the old entry) on inactive rows."""
+    if active is None:
+        return jax.vmap(
+            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i,
+                                                                axis=0)
+        )(cache, new, slot)
+
+    def upd(c, n, i, a):
+        cur = jax.lax.dynamic_slice_in_dim(c, i, n.shape[0], axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(
+            c, jnp.where(a, n, cur), i, axis=0)
+
+    return jax.vmap(upd)(cache, new, slot, active)
 
 
 # ---------------------------------------------------------------------------
@@ -219,12 +255,15 @@ def gqa_attention(cfg: ModelConfig, params, x, th, positions, *,
 
 
 def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
-               window=None):
+               window=None, active=None):
     """One-token decode. x: (B, 1, D); cache_k/v: (B, S, KV, hd); pos: (B,)
     number of tokens already in the cache (new token index).
 
     Sliding-window caches are ring buffers of capacity W; full caches have
-    capacity seq_len. Keys are stored post-RoPE."""
+    capacity seq_len. Keys are stored post-RoPE. `active`: optional (B,)
+    bool — rows with False keep their cache entries untouched (their
+    returned attention output is garbage and must be discarded; the
+    caller also keeps their `pos` frozen, see transformer.serve_step)."""
     qkv = L.linear(params["qkv"], x, th["qkv"])
     q, k, v = _split_qkv(cfg, qkv)
     q, k = _qk_norm(cfg, params, th, q, k)
@@ -234,13 +273,8 @@ def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
     cap = cache_k.shape[1]
     slot = (pos % cap) if window is not None else pos
 
-    def write(cache, new):
-        return jax.vmap(
-            lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
-        )(cache, new, slot)
-
-    cache_k = write(cache_k, k)
-    cache_v = write(cache_v, v)
+    cache_k = _masked_cache_write(cache_k, k, slot, active)
+    cache_v = _masked_cache_write(cache_v, v, slot, active)
     # key positions: full cache -> arange; ring -> recovered from slot algebra
     ar = jnp.arange(cap)[None, :]
     if window is None:
@@ -327,13 +361,14 @@ def mla_attention(cfg: ModelConfig, params, x, th, positions, *, causal=True,
                  lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
 
 
-def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos):
+def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos,
+               *, active=None):
     """Absorbed-form MLA decode against the latent cache.
 
     cache_ckv: (B, S, lr); cache_krope: (B, S, rope). One new token.
     W_UK is folded into the query (q_lat = q_nope @ W_UK per head) and W_UV
     applied after attending over latents, so per-step cost is O(S·lr), not
-    O(S·H·hd).
+    O(S·H·hd). `active`: optional (B,) row mask, as in `gqa_decode`.
     """
     b = x.shape[0]
     h = cfg.num_heads
@@ -349,10 +384,8 @@ def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos):
     krope_new = L.apply_rope(kv_a[..., lr:].reshape(b, 1, 1, rope), posb,
                              cfg.rope_theta).reshape(b, 1, rope)
 
-    write = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
-        c, n, i, axis=0))
-    cache_ckv = write(cache_ckv, ckv_new, pos)
-    cache_krope = write(cache_krope, krope_new, pos)
+    cache_ckv = _masked_cache_write(cache_ckv, ckv_new, pos, active)
+    cache_krope = _masked_cache_write(cache_krope, krope_new, pos, active)
 
     # absorb W_UK / W_UV (per-head slices of kv_b)
     w_kv_b = params["kv_b"]["w"].reshape(lr, h, nope + vd)

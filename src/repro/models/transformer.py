@@ -682,8 +682,16 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
         return cache
 
     def serve_step(params, cache, batch):
-        """batch: {'token': (B, 1) int32}; returns (logits (B, V), cache)."""
+        """batch: {'token': (B, 1) int32, optional 'active': (B,) bool};
+        returns (logits (B, V), cache).
+
+        `active` is the slot-pool write/retire hook (launch.engine): rows
+        with `active=False` come back with a bit-identical cache slot and
+        an unchanged position — their logits are garbage and must be
+        ignored by the caller. Omitting the key advances every row (the
+        historical single-batch path, no masking cost)."""
         token = batch["token"]
+        active = batch.get("active")
         b = token.shape[0]
         pos = cache["pos"]
         th = layout.pack_value(jnp.inf, b)
@@ -719,7 +727,8 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                                                       keepdims=False)
                     att, ck, cv = A.gqa_decode(
                         cfg, params["shared"]["attn"], hn,
-                        mk_shared("attn"), ck, cv, pos, window=window)
+                        mk_shared("attn"), ck, cv, pos, window=window,
+                        active=active)
                     sk_all = jax.lax.dynamic_update_index_in_dim(
                         sk_all, ck, site, axis=0)
                     sv_all = jax.lax.dynamic_update_index_in_dim(
@@ -737,6 +746,8 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                 hn = L.rmsnorm(bp["norm"], h, inf_b, eps=cfg.norm_eps)
                 out, conv_n, ssm_n = M2.mamba2_decode(
                     cfg, bp["m"], hn, subth_bb("m"), conv_s, ssm_s)
+                conv_n = A.masked_state(active, conv_n, conv_s)
+                ssm_n = A.masked_state(active, ssm_n, ssm_s)
                 return (h + out, i + 1, sk_all, sv_all), (conv_n, ssm_n)
 
             (x, _, sk_all, sv_all), (conv_n, ssm_n) = jax.lax.scan(
@@ -755,6 +766,8 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                 hn = L.rmsnorm(bp["norm"], h, inf_b, eps=cfg.norm_eps)
                 out, conv_n, ssm_n = M2.mamba2_decode(cfg, bp["m"], hn, tm,
                                                       conv_s, ssm_s)
+                conv_n = A.masked_state(active, conv_n, conv_s)
+                ssm_n = A.masked_state(active, ssm_n, ssm_s)
                 return h + out, (conv_n, ssm_n)
 
             x, (conv_n, ssm_n) = jax.lax.scan(
@@ -777,6 +790,9 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                 hn = L.rmsnorm(bp["norm2"], h, inf_b, eps=cfg.norm_eps)
                 ff, cm_n = R6.channel_mix_decode(cfg, bp["cm"], hn,
                                                  mk("blocks/cm"), x_prev=cm_p)
+                tm_n = A.masked_state(active, tm_n, tm_p)
+                cm_n = A.masked_state(active, cm_n, cm_p)
+                st_n = A.masked_state(active, st_n, st)
                 return h + ff, (tm_n, cm_n, st_n)
 
             x, (tm_n, cm_n, st_n) = jax.lax.scan(
@@ -804,7 +820,8 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
                         att, ckv_n, krope_n = A.mla_decode(
-                            cfg, bp["attn"], hn, mk("attn"), ckv, krope, pos)
+                            cfg, bp["attn"], hn, mk("attn"), ckv, krope, pos,
+                            active=active)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -830,7 +847,7 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                                        eps=cfg.norm_eps)
                         att, ck_n, cv_n = A.gqa_decode(
                             cfg, bp["attn"], hn, mk("attn"), ck, cv, pos,
-                            window=window)
+                            window=window, active=active)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -853,7 +870,8 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
         x = L.rmsnorm(params["final_norm"], x, th["final_norm"],
                       eps=cfg.norm_eps)
         logits = dpl.dp_linear(params["head"]["w"], None, x, th["head"])
-        new_cache["pos"] = pos + 1
+        new_cache["pos"] = (pos + 1 if active is None
+                            else pos + active.astype(jnp.int32))
         return logits[:, 0], new_cache
 
     return serve_step, init_cache
@@ -962,6 +980,7 @@ def _build_encdec(cfg: ModelConfig) -> Model:
 
     def serve_step(params, cache, batch):
         token = batch["token"]
+        active = batch.get("active")  # (B,) slot write/retire mask
         b = token.shape[0]
         pos = cache["pos"]
         inf_b = jnp.full((b,), jnp.inf)
@@ -979,7 +998,7 @@ def _build_encdec(cfg: ModelConfig) -> Model:
             bp, ck, cv, xk, xv = xs
             hn = L.rmsnorm(bp["attn_norm"], h, inf_b, eps=cfg.norm_eps)
             att, ck_n, cv_n = A.gqa_decode(cfg, bp["attn"], hn, mk("attn"),
-                                           ck, cv, pos)
+                                           ck, cv, pos, active=active)
             h = h + att
             # cross attention over the precomputed encoder KV
             hn = L.rmsnorm(bp["cross_norm"], h, inf_b, eps=cfg.norm_eps)
@@ -1002,7 +1021,8 @@ def _build_encdec(cfg: ModelConfig) -> Model:
                       cache["cross_k"], cache["cross_v"]))
         new_cache = dict(cache)
         new_cache["dec_k"], new_cache["dec_v"] = ck_n, cv_n
-        new_cache["pos"] = pos + 1
+        new_cache["pos"] = (pos + 1 if active is None
+                            else pos + active.astype(jnp.int32))
         x = L.rmsnorm(params["final_norm"], x, th["final_norm"],
                       eps=cfg.norm_eps)
         logits = dpl.dp_linear(params["head"]["w"], None, x, th["head"])

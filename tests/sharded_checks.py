@@ -18,12 +18,19 @@ Checks (sharded == single-device, same math different communication):
   * the DP-LoRA trainable_key path (ghost_flat on a reduced qwen3-4b);
   * the Sec-4 communication contract from compiled HLO: per-device
     (per_group) has ZERO model-axis collectives in norm computation,
-    ghost_flat has >= 1 (launch.hlo_analysis.model_axis_norm_collectives).
+    ghost_flat has >= 1 (launch.hlo_analysis.model_axis_norm_collectives);
+  * the quantile contract: shard-local clip counts psum'd over the data
+    plane (quantile.update_thresholds counts_axes=) reproduce the
+    single-device geometric update bit-for-bit on every shard;
+  * checkpoint round-trip of model-sharded params (the train.py --mesh
+    resume path): save -> restore with target shardings (zlib fallback
+    codec forced) -> one more step bitwise-equal to the uninterrupted run.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
+import os
 import sys
 import traceback
 
@@ -180,6 +187,97 @@ def check_lora(mesh4, results):
         results[name] = f"{type(e).__name__}: {e}"
 
 
+def check_quantile_sharded(mesh, results):
+    """One geometric update from GLOBAL counts: shard-local clip counts +
+    the data-plane psum inside update_thresholds must reproduce the
+    single-device quantile state exactly (replicated across every shard,
+    asserted by the PS() out_spec)."""
+    from repro.core.quantile import (clip_counts, init_quantile_state,
+                                     update_thresholds)
+    name = "quantile_sharded_parity"
+    try:
+        k = 5
+        norms = jax.random.uniform(jax.random.PRNGKey(3), (k, B)) * 0.8
+        state = init_quantile_state(np.linspace(0.2, 1.0, k), sigma_b=3.0)
+        key = jax.random.PRNGKey(7)
+        want = update_thresholds(
+            state, clip_counts(norms, state.thresholds), B, key)
+        dax = tuple(a for a in mesh.axis_names if a != "model")
+
+        def body(norms_local):
+            local = clip_counts(norms_local, state.thresholds)
+            return update_thresholds(state, local, B, key,
+                                     counts_axes=dax).thresholds
+
+        f = named_shard_map(body, mesh, in_specs=(PS(None, dax),),
+                            out_specs=PS())
+        got = jax.jit(f)(norms)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(want.thresholds))
+        results[name] = "ok"
+    except Exception as e:  # noqa: BLE001
+        results[name] = f"{type(e).__name__}: {e}"
+
+
+def check_checkpoint_roundtrip(m, mesh, params, batch, results):
+    """train.py --mesh resume path: 2 sharded steps -> save (params STORED
+    model-sharded, zlib fallback codec) -> restore with target shardings
+    -> step 3 bitwise-equal to the uninterrupted run."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint import store as store_mod
+    from repro.checkpoint.store import load_checkpoint, save_checkpoint
+    from repro.launch.sharding import params_shardings
+
+    name = "checkpoint_roundtrip_sharded"
+    had_zstd = store_mod.zstd
+    tmp = tempfile.mkdtemp(prefix="ckpt_roundtrip_")
+    try:
+        dpc = DPConfig(mode="ghost_flat", sigma=1.0, sampling_rate=0.1,
+                       steps=10, adaptive=True)
+        init_fn, step_fn, _ = make_dp_train_step(
+            m.loss_fn, m.spec, m.layout, optim.adam(1e-3), dpc,
+            batch_size=B, mesh=mesh)
+        pshard = params_shardings(m.spec, mesh)
+        step = jax.jit(step_fn,
+                       in_shardings=(pshard, None, None, None, None),
+                       out_shardings=(pshard, None, None, None))
+        opt_state, dp_state = init_fn(params)
+        p = jax.device_put(params, pshard)
+        key = jax.random.PRNGKey(11)
+        for _ in range(2):
+            p, opt_state, dp_state, _ = step(p, opt_state, dp_state, batch,
+                                             key)
+
+        tree = {"params": p, "opt": opt_state, "dp": dp_state}
+        store_mod.zstd = None  # force + cover the stdlib zlib fallback
+        path = save_checkpoint(tmp, 2, tree)
+        import msgpack
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as fh:
+            assert msgpack.unpackb(fh.read())["codec"] == "zlib"
+        nil = jax.tree_util.tree_map(lambda _: None,
+                                     {"opt": opt_state, "dp": dp_state})
+        restored = load_checkpoint(
+            tmp, 2, tree, shardings={"params": pshard, **nil})
+        for leaf, sh in zip(jax.tree_util.tree_leaves(restored["params"]),
+                            jax.tree_util.tree_leaves(pshard)):
+            assert leaf.sharding == sh, (leaf.sharding, sh)
+        # resumed step == uninterrupted step, bitwise
+        a = step(p, opt_state, dp_state, batch, key)
+        b = step(restored["params"], restored["opt"], restored["dp"],
+                 batch, key)
+        for x, y in zip(jax.tree_util.tree_leaves(a),
+                        jax.tree_util.tree_leaves(b)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        results[name] = "ok"
+    except Exception as e:  # noqa: BLE001
+        results[name] = f"{type(e).__name__}: {e}"
+    finally:
+        store_mod.zstd = had_zstd
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
 def check_hlo_axis_contract(m, mesh, params, batch, assign, results):
     """Sec 4, asserted from compiled HLO: per-device clipping moves ZERO
     norm information across the model axis; flat clipping must."""
@@ -231,6 +329,8 @@ def main() -> int:
         check_clip_parity(m, mesh, params, batch, assign, results)
         check_step_parity(m, mesh, params, batch, assign, results)
         check_lora(mesh4, results)
+        check_quantile_sharded(mesh, results)
+        check_checkpoint_roundtrip(m, mesh, params, batch, results)
         check_hlo_axis_contract(m, mesh, params, batch, assign, results)
     except Exception:  # noqa: BLE001
         results["fatal"] = traceback.format_exc()[-2000:]
