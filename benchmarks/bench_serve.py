@@ -19,6 +19,14 @@ All paths serve the SAME ragged request set and produce identical tokens
                      arrivals (requests queue and recycle slots).
   engine_staggered   pool size 4 with arrivals trickling in mid-flight.
 
+The budget sweep holds CACHE BYTES fixed instead of slot count: a
+contiguous 2-slot engine sets the byte budget, then a paged engine is
+sized to fit UNDER that budget (block pool + page tables + trash page)
+and serves the same traffic — short requests only reserve the pages
+they will actually touch, so the paged pool runs strictly more
+concurrent slots on the same memory. ``paged_more_slots_at_budget`` in
+BENCH_serve.json records the claim; ``--smoke`` asserts it.
+
 Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--smoke|--full]
 """
 from __future__ import annotations
@@ -143,6 +151,8 @@ def run(quick: bool = True):
         wall = time.perf_counter() - t0
         tps = gen_tokens / wall
         occupancy.append({"slots": s, "wall_s": wall, "tokens_per_s": tps,
+                          "paged": eng.paged,
+                          "cache_bytes": eng.cache_bytes(),
                           "decode_dispatches":
                               eng.stats["decode_dispatches"]
                               - before["decode_dispatches"],
@@ -165,6 +175,48 @@ def run(quick: bool = True):
         "wall_s": wall, "tokens_per_s": tps, "stagger_every_steps": 3}
     yield f"serve_engine_staggered_s4,{wall * 1e6:.1f},tok_s={tps:.1f}"
 
+    # ---- paged vs contiguous at a fixed cache-byte budget ----
+    # A contiguous 2-slot engine fixes the budget. The paged engine gets
+    # one page-pool row-count LESS than those two contiguous slots (the
+    # spare rows pay for the trash page and the int32 page tables) but
+    # SIX slots over it: traffic of <=16-token requests holds 2 pages per
+    # slot, so concurrency is bounded by the pool, not the slot count.
+    b_gen = 6
+    b_reqs = synthetic_requests(cfg.vocab_size, n_req, min_len=2,
+                                max_len=10, seed=7)
+    b_tokens = n_req * b_gen
+    pl, b_cache = 8, 48
+    ptab = b_cache // pl
+    budget_sweep = []
+    for label, kw in (
+            ("contiguous_s2", dict(num_slots=2, paging="off")),
+            ("paged_s6", dict(num_slots=6, paging="on", page_len=pl,
+                              num_pages=2 * ptab - 2))):
+        eng = DecodeEngine(model, params, cache_len=b_cache, **kw)
+        _engine_serve(eng, warm, 2)  # compile
+        # reset peak trackers so the warmup doesn't count
+        eng.stats["peak_live_slots"] = 0
+        t0 = time.perf_counter()
+        _engine_serve(eng, b_reqs, b_gen)
+        wall = time.perf_counter() - t0
+        budget_sweep.append({
+            "label": label, "slots": eng.num_slots, "paged": eng.paged,
+            "cache_bytes": eng.cache_bytes(),
+            "peak_live_slots": eng.stats["peak_live_slots"],
+            "wall_s": wall, "tokens_per_s": b_tokens / wall})
+        yield (f"serve_budget_{label},{wall * 1e6:.1f},"
+               f"bytes={eng.cache_bytes()} "
+               f"peak_live={eng.stats['peak_live_slots']} "
+               f"tok_s={b_tokens / wall:.1f}")
+    contig_b, paged_b = budget_sweep
+    record["engine"]["budget_sweep"] = {
+        "cache_len": b_cache, "page_len": pl, "gen": b_gen,
+        "prompt_lens": [int(len(r)) for r in b_reqs],
+        "entries": budget_sweep}
+    record["paged_more_slots_at_budget"] = bool(
+        paged_b["cache_bytes"] <= contig_b["cache_bytes"]
+        and paged_b["peak_live_slots"] > contig_b["slots"])
+
     s4 = next(o for o in occupancy if o["slots"] == 4)
     record["engine_beats_loop_at_4"] = bool(
         s4["tokens_per_s"] > loop_tps)
@@ -172,7 +224,9 @@ def run(quick: bool = True):
         json.dump(record, fh, indent=1)
     yield (f"serve_summary,0,engine_s4={s4['tokens_per_s']:.1f}tok_s "
            f"loop={loop_tps:.1f}tok_s "
-           f"beats_loop={record['engine_beats_loop_at_4']}")
+           f"beats_loop={record['engine_beats_loop_at_4']} "
+           f"paged_more_slots_at_budget="
+           f"{record['paged_more_slots_at_budget']}")
 
 
 def main():
@@ -189,6 +243,9 @@ def main():
             rec = json.load(fh)
         assert rec["engine_beats_loop_at_4"], (
             "engine at 4 slots did not beat the per-token dispatch loop")
+        assert rec["paged_more_slots_at_budget"], (
+            "paged engine did not serve more concurrent slots than the "
+            "contiguous engine at the same cache-byte budget")
     return 0
 
 

@@ -2,7 +2,10 @@
 # Perf smoke: the Figure-1 throughput bench on the tiny config, covering
 # BOTH executions of the flat/group clipping modes (bk vs twopass), plus
 # the serving-engine bench (slot-pool continuous batching vs the
-# dispatch-per-token loop — --smoke ASSERTS the engine wins at 4 slots).
+# dispatch-per-token loop). --smoke ASSERTS the acceptance bars: the
+# engine wins at 4 slots, AND the paged KV data plane serves strictly
+# more concurrent slots than per-slot contiguous caches at the same
+# cache-byte budget (the fixed-budget sweep in BENCH_serve.json).
 # Writes benchmarks/BENCH_throughput.json + BENCH_serve.json and
 # refreshes the cross-PR aggregate benchmarks/BENCH_summary.json.
 set -euo pipefail

@@ -17,6 +17,22 @@ cd ..
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
         --slots 3 --prompt-len 12 --min-prompt-len 3 --gen 16
+
+# ---- paged data-plane smoke: the same ragged traffic through the block
+# pool with a common system prompt (its full pages are shared
+# physically), then a deliberately starved pool (--num-pages below the
+# working set) so admission has to evict registered prefixes through the
+# host spill tier and re-admit them. Token parity for all of this is
+# asserted by tests/test_paged.py; these runs exercise the CLI wiring
+# end to end.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
+        --slots 3 --prompt-len 12 --min-prompt-len 3 --gen 16 \
+        --paging on --page-len 8 --shared-prefix 16
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
+        --slots 2 --prompt-len 24 --min-prompt-len 24 --gen 16 \
+        --paging on --page-len 8 --num-pages 12
 cd scripts
 
 # ---- sharded stage: the multi-device engine on 8 virtual CPU devices ----

@@ -28,6 +28,7 @@ Backend selection matrix (op x backend), CPU behavior in parens:
   linear_clip (norm+clip)   composed       fused_norm_clip*      fused if VMEM fits
   bias/embed/scale/vector   einsum/scatter = xla (no kernel)     = xla
   clipped_sum_bias/embed/.. einsum/scatter = xla (no kernel)     = xla
+  paged_attn (decode)       gather+attend  paged_attn (interp)   pallas on TPU
 
   (*) falls back to the two-kernel composition when 2·din·dout f32 exceeds
       `vmem_limit_bytes`, or when `prefer_fused=False`. The fused kernel
@@ -67,6 +68,8 @@ from repro.kernels.clip_reduce import clip_reduce
 from repro.kernels.fused_clip import fused_norm_clip
 from repro.kernels.fused_clip import padded_dims as fused_clip_padded_dims
 from repro.kernels.ghost_norm import ghost_norm, ghost_norm_blocked
+from repro.kernels.paged_attn import paged_attn as paged_attn_kernel
+from repro.kernels.ref import paged_attn_ref
 
 __all__ = [
     "EngineConfig", "Backend", "XlaBackend", "PallasBackend", "AutoBackend",
@@ -194,6 +197,22 @@ class Backend:
               * factors[:, :, None, None].astype(jnp.float32))
         return jnp.einsum("sbti,sbto->sio", a32, gs)
 
+    # -- paged decode attention (launch.engine data plane) -----------------
+    def paged_impl(self) -> str:
+        """Which implementation `paged_attn` resolves to: 'xla'|'pallas'.
+
+        The serve paths branch on this statically at trace time: the xla
+        gather path is the bitwise oracle (its math replicates the
+        contiguous decode exactly), the pallas kernel is the TPU
+        paged-gather path (allclose-level, different softmax association).
+        """
+        return "xla"
+
+    def paged_attn(self, q, kpool, vpool, pt, pos, *, scale, dv=None):
+        """One-token attention through a page table (kernels/paged_attn.py
+        shapes). Base = the gather + attend-replica reference."""
+        return paged_attn_ref(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
+
     # -- fused norm + clip + reduce ---------------------------------------
     def linear_clip(self, a, g, c, extra_norms_sq=None):
         """One linear layer's whole backward clip:  (n_total, f, dW).
@@ -269,6 +288,13 @@ class PallasBackend(Backend):
                                      bj=self.config.bj, bt=self.config.bt,
                                      interpret=self._interpret())
 
+    def paged_impl(self) -> str:
+        return "pallas"
+
+    def paged_attn(self, q, kpool, vpool, pt, pos, *, scale, dv=None):
+        return paged_attn_kernel(q, kpool, vpool, pt, pos, scale=scale,
+                                 dv=dv, interpret=self._interpret())
+
 
 def choose_linear_path(t: int, din: int, dout: int, config: EngineConfig,
                        *, on_tpu: bool | None = None) -> str:
@@ -334,6 +360,18 @@ class AutoBackend(Backend):
         choice = choose_linear_path(t, din, dout, self.config)
         eng = self._pallas if choice == "pallas" else self._xla
         return eng.scale_contract(a, g, factors)
+
+    def paged_impl(self) -> str:
+        # the kernel's paged-gather DMA only pays off on TPU; off-TPU the
+        # interpret-mode kernel is validation-only, so auto stays on the
+        # (bitwise-oracle) xla gather path unless interpret is forced
+        if jax.default_backend() == "tpu" or self.config.interpret is True:
+            return "pallas"
+        return "xla"
+
+    def paged_attn(self, q, kpool, vpool, pt, pos, *, scale, dv=None):
+        eng = self._pallas if self.paged_impl() == "pallas" else self._xla
+        return eng.paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
 
 
 # ---------------------------------------------------------------------------

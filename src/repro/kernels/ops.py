@@ -22,6 +22,7 @@ from repro.kernels.bk import scale_contract
 from repro.kernels.clip_reduce import clip_reduce
 from repro.kernels.fused_clip import fused_norm_clip
 from repro.kernels.ghost_norm import ghost_norm, ghost_norm_blocked
+from repro.kernels.paged_attn import paged_attn
 
 _INTERPRET = jax.default_backend() != "tpu"
 
@@ -56,3 +57,10 @@ def scale_contract_op(a, g, factors, *, bi: int = 256, bj: int = 256,
                       bt: int = 256):
     return scale_contract(a, g, factors, bi=bi, bj=bj, bt=bt,
                           interpret=_INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("scale", "dv"))
+def paged_attn_op(q, kpool, vpool, pt, pos, *, scale: float,
+                  dv: int | None = None):
+    return paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv,
+                      interpret=_INTERPRET)

@@ -1,6 +1,16 @@
-"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth).
+
+`paged_attn_ref` is special: besides being the kernel's oracle it IS the
+production XLA path for paged decode attention (kernels/backend.py), and
+its math is a line-for-line replica of the single-shot decode branch of
+`models.attention.attend` applied to the table-gathered cache — that
+replica is what makes the paged engine bitwise identical to the
+contiguous engine when the logical capacity matches (page tables gather
+the same values; masked score entries are exactly NEG_INF on both sides).
+"""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -49,6 +59,37 @@ def scale_contract_ref(a: jnp.ndarray, g: jnp.ndarray,
     a32, g32 = a.astype(jnp.float32), g.astype(jnp.float32)
     gs = g32 * factors[:, :, None, None].astype(jnp.float32)
     return jnp.einsum("sbti,sbto->sio", a32, gs)
+
+
+def paged_attn_ref(q, kpool, vpool, pt, pos, *, scale: float,
+                   dv: int | None = None) -> jnp.ndarray:
+    """Paged-gather one-token attention (kernels/paged_attn.py shapes).
+
+    q: (B, KV, G, dq); kpool: (N, L, KV, dq); vpool: (N, L, KV, dvp);
+    pt: (B, P) int32; pos: (B,) int32 -> (B, KV, G, dv) float32.
+
+    Gather k/v through the page table, then the exact einsum/softmax
+    sequence of `attend`'s single-shot branch with the full-cache kpos
+    validity (logical index <= pos). `dv` truncates the value read (MLA
+    latents: vpool aliases kpool, values are the first `dv` features).
+    """
+    b, kv, g, dq = q.shape
+    page_len = kpool.shape[1]
+    p_tab = pt.shape[1]
+    s_log = p_tab * page_len
+    k = kpool[pt].reshape(b, s_log, kv, dq)
+    v = vpool[pt].reshape(b, s_log, kv, vpool.shape[-1])
+    if dv is not None:
+        v = v[..., :dv]
+    # scale BEFORE the f32 cast, exactly as `attend` does (bitwise parity
+    # with the contiguous path for sub-f32 query dtypes)
+    qg = (q[:, None] * scale).astype(jnp.float32)     # (B, 1, KV, G, dq)
+    scores = jnp.einsum("btkgd,bskd->btkgs", qg, k.astype(jnp.float32))
+    valid = jnp.arange(s_log, dtype=jnp.int32)[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("btkgs,bskd->btkgd", w, v.astype(jnp.float32))
+    return out[:, 0]
 
 
 def fused_norm_clip_ref(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,

@@ -1,10 +1,9 @@
 """Continuous-batching decode engine over a fixed slot pool.
 
-`DecodeEngine` owns a pre-allocated decode cache of `num_slots` slots
-(the `slot`/`pos` ring algebra of models/attention.py) and serves an
-arbitrary stream of ragged requests through THREE compiled programs whose
-shapes never depend on the traffic — no recompilation as requests come
-and go:
+`DecodeEngine` owns a pre-allocated decode cache of `num_slots` slots and
+serves an arbitrary stream of ragged requests through THREE compiled
+programs whose shapes never depend on the traffic — no recompilation as
+requests come and go:
 
   admission  `_prefill`  — a jitted scan over a fixed-size chunk of
       `prefill_chunk` prompt positions. Only the slots being admitted are
@@ -13,14 +12,46 @@ and go:
       pollute the pool) while every other slot — mid-decode or idle — is
       bit-frozen. Each admitted slot's TRUE-last-token logits accumulate
       in a persistent (S, V) buffer; its argmax is the slot's first
-      output token.
+      output token. Co-admission is skew-capped: a queued request whose
+      prompt needs more than `prefill_skew_chunks` extra chunks than its
+      batch-mates waits for its own batch instead of forcing everyone
+      through its padded chunk grid (`prefill_pad_chunks_saved` counts
+      the padded slot-chunks this avoids).
   decode     `_decode`   — ONE dispatch advances every live slot by one
       greedy token; retired / free slots ride along masked.
-  recycle    `_reset`    — zeroes the cache rows (KV, ring, recurrent
-      state, position) of slots being handed to a new request, so a
-      recycled slot cannot leak its previous occupant. (For attention
-      caches the `pos -> 0` reset alone masks stale entries via the
-      kpos validity algebra; recurrent state needs the explicit zero.)
+  recycle    `_reset`    — re-arms the slots being handed to a new
+      request. The per-key slot axis comes from the model's
+      `cache_slot_axes` spec (recurrent state zeroes on its slot axis,
+      `pos` resets to the slot's start offset, physical page pools pass
+      through untouched — they are shared by every slot).
+
+Two cache data planes:
+
+  contiguous (legacy / ring / recurrent): every slot owns `cache_len`
+      rows up front — HBM scales as slots x max-context regardless of
+      actual request lengths.
+  paged (full-attention families): a fixed physical pool of
+      `(num_pages, page_len, ...)` KV blocks plus per-slot int32 page
+      tables (launch.pages). Admission reserves exactly
+      ceil((prompt+gen)/page_len) pages per request (never OOMs
+      mid-decode; requests the pool can't cover yet are deferred, FIFO
+      order preserved), retirement is O(table) — pages return to the
+      free list, nothing is zeroed (the kpos validity algebra masks
+      stale page contents). Full pages of completed prompts register in
+      a prefix store: a later request sharing the prefix maps the SAME
+      physical pages (refcounted, written by nobody — its first write
+      lands past them) and skips their prefill entirely. Cold prefixes
+      spill page bytes to host memory under pressure and re-admit
+      bitwise on a later hit.
+
+Paging is on by default (`paging="auto"`) when the model family supports
+it (full attention, no ring window, not recurrent) and `cache_len` is a
+multiple of `page_len` — under that divisibility the paged engine's
+output is BITWISE identical to the contiguous engine and to the
+per-request loop oracle (the paged XLA attention replicates the
+contiguous decode math over table-gathered pages; masked scores are
+exactly NEG_INF on both sides). `paging="on"` forces it (raising if
+unsupported), `paging="off"` keeps the contiguous plane.
 
 Retirement (EOS / max-token) and the request queue are host-side numpy
 bookkeeping over (S,) vectors; every device call has static shapes, so
@@ -44,6 +75,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.launch.pages import PagePool, PrefixStore, pages_needed
+
 
 @dataclasses.dataclass
 class Completion:
@@ -59,22 +92,63 @@ class DecodeEngine:
     """Slot-pool continuous-batching greedy decoder (see module doc)."""
 
     def __init__(self, model, params, *, num_slots: int, cache_len: int,
-                 prefill_chunk: int = 8, eos_id: int | None = None):
+                 prefill_chunk: int = 8, eos_id: int | None = None,
+                 paging: str = "auto", page_len: int = 16,
+                 num_pages: int | None = None, host_spill: bool = True,
+                 prefill_skew_chunks: int = 1):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if paging not in ("auto", "on", "off"):
+            raise ValueError("paging must be 'auto', 'on' or 'off'")
+        if page_len < 1:
+            raise ValueError("page_len must be >= 1")
+        if prefill_skew_chunks < 0:
+            raise ValueError("prefill_skew_chunks must be >= 0")
         self.model, self.params = model, params
         self.num_slots, self.cache_len = num_slots, cache_len
         self.eos_id = eos_id
         self._chunk = prefill_chunk
+        self._skew = prefill_skew_chunks
         cfg = model.cfg
         # full (non-ring) attention caches hard-bound the horizon; ring /
         # recurrent caches only carry O(1) or windowed state
         self._bounded = cfg.attention_kind == "mla" or (
             cfg.attention_kind == "gqa" and cfg.sliding_window is None)
 
-        self.cache = model.init_cache(num_slots, cache_len)
+        can_page = (getattr(model, "init_paged_cache", None) is not None
+                    and self._bounded and cache_len % page_len == 0)
+        if paging == "on" and not can_page:
+            raise ValueError(
+                "paging='on' needs a full-attention model family and "
+                "cache_len divisible by page_len (ring-window / recurrent "
+                "caches bypass paging)")
+        self.paged = can_page if paging == "auto" else paging == "on"
+        self.page_len = page_len
+
+        if self.paged:
+            ptab = cache_len // page_len
+            self.num_pages = (num_slots * ptab if num_pages is None
+                              else int(num_pages))
+            if self.num_pages < 1:
+                raise ValueError("num_pages must be >= 1")
+            self.cache = model.init_paged_cache(
+                num_slots, cache_len, num_pages=self.num_pages,
+                page_len=page_len)
+            self._pool = PagePool(self.num_pages, page_len)
+            self._prefix = PrefixStore(self._pool)
+            self._host_spill = host_spill
+            # host mirror of cache["pt"]; trash page index = num_pages
+            self._table = np.full((num_slots, ptab), self.num_pages,
+                                  np.int32)
+            self._row_pages: list[list[int]] = [[] for _ in range(num_slots)]
+            self._pool_keys = [k for k in self.cache
+                               if k.endswith(("_kpool", "_vpool",
+                                              "_latpool"))]
+        else:
+            self.num_pages = None
+            self.cache = model.init_cache(num_slots, cache_len)
         self._last = jnp.zeros((num_slots, cfg.vocab_size), jnp.float32)
 
         # ---- host-side slot table ----
@@ -83,13 +157,24 @@ class DecodeEngine:
         self._gen = np.zeros((num_slots,), np.int64)
         self._max = np.zeros((num_slots,), np.int64)
         self._tok = np.zeros((num_slots,), np.int32)  # last emitted token
+        self._start = np.zeros((num_slots,), np.int32)  # pos at admission
         self._queue: collections.deque = collections.deque()
         self._out: dict[int, list[int]] = {}
         self._plen: dict[int, int] = {}
         self._done: dict[int, Completion] = {}
         self._next_rid = 0
-        self.stats = {"prefill_dispatches": 0, "decode_dispatches": 0,
-                      "tokens_out": 0, "requests_done": 0}
+        self.stats = {
+            "prefill_dispatches": 0, "decode_dispatches": 0,
+            "tokens_out": 0, "requests_done": 0,
+            # admission-skew observability
+            "prefill_pad_chunks_saved": 0,
+            # occupancy-weighted utilization
+            "live_slot_steps": 0, "peak_live_slots": 0,
+            "pages_in_use": 0, "peak_pages_in_use": 0,
+            # paged data plane
+            "prefix_hits": 0, "shared_pages": 0, "evicted_pages": 0,
+            "readmitted_pages": 0, "admission_deferrals": 0,
+        }
 
         # ---- the three compiled programs ----
         def prefill_fn(params, cache, last, toks, valid):
@@ -114,13 +199,23 @@ class DecodeEngine:
                              axis=-1).astype(jnp.int32)
             return cache, jnp.where(live, nxt, tok)
 
-        def reset_fn(cache, mask):
+        axes = model.cache_slot_axes(self.cache)
+
+        def reset_fn(cache, mask, starts):
             out = {}
             for k, v in cache.items():
-                ax = 0 if k == "pos" else 1  # slot axis per cache family
-                m = mask.reshape((1,) * ax + (num_slots,)
-                                 + (1,) * (v.ndim - ax - 1))
-                out[k] = jnp.where(m, jnp.zeros_like(v), v)
+                ax = axes[k]
+                if ax is None or k == "pt":
+                    # slot-free page pools; pt is replaced host-side right
+                    # after the reset (the host table is authoritative)
+                    out[k] = v
+                elif k == "pos":
+                    # prefix-sharing slots resume mid-sequence
+                    out[k] = jnp.where(mask, starts, v)
+                else:
+                    m = mask.reshape((1,) * ax + (num_slots,)
+                                     + (1,) * (v.ndim - ax - 1))
+                    out[k] = jnp.where(m, jnp.zeros_like(v), v)
             return out
 
         self._prefill = jax.jit(prefill_fn, donate_argnums=(1, 2))
@@ -143,6 +238,12 @@ class DecodeEngine:
     def num_live(self) -> int:
         return int(self._live.sum())
 
+    def cache_bytes(self) -> int:
+        """Device bytes held by the decode cache (pools + tables +
+        positions for the paged plane; per-slot caches otherwise)."""
+        return int(sum(v.size * v.dtype.itemsize
+                       for v in self.cache.values()))
+
     def submit(self, prompt, max_new_tokens: int) -> int:
         """Enqueue one request; admitted into a free slot at the next
         `step()`. Returns the request id."""
@@ -156,6 +257,12 @@ class DecodeEngine:
             raise ValueError(
                 f"request needs {prompt.size}+{max_new_tokens} cache slots "
                 f"but the pool was sized with cache_len={self.cache_len}")
+        if self.paged:
+            need = pages_needed(prompt.size + max_new_tokens, self.page_len)
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages but the page pool holds "
+                    f"only num_pages={self.num_pages}")
         rid = self._next_rid
         self._next_rid += 1
         self._queue.append((rid, prompt, int(max_new_tokens)))
@@ -173,6 +280,9 @@ class DecodeEngine:
                                        jnp.asarray(self._tok),
                                        jnp.asarray(self._live))
         self.stats["decode_dispatches"] += 1
+        self.stats["live_slot_steps"] += int(live_idx.size)
+        self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
+                                            int(live_idx.size))
         nxt = np.asarray(nxt)
         for slot in live_idx:
             self._emit(int(slot), int(nxt[slot]))
@@ -196,33 +306,136 @@ class DecodeEngine:
         return dict(self._done)
 
     # ------------------------------------------------------------------
+    # Paged data plane (host side; device arrays live in self.cache).
+    # ------------------------------------------------------------------
+
+    def _alloc_evicting(self, n: int) -> list[int] | None:
+        """Allocate `n` pages, spilling cold registered prefixes to the
+        host tier (or dropping them when host_spill=False) until the pool
+        can cover it. None if even a fully evicted device tier cannot."""
+        got = self._pool.alloc(n)
+        while got is None:
+            entry = self._prefix.evict_lru()
+            if entry is None:
+                return None
+            if self._host_spill:
+                idx = jnp.asarray(np.asarray(entry.pages, np.int32))
+                data = {k: np.asarray(jax.device_get(self.cache[k][:, idx]))
+                        for k in self._pool_keys}
+                freed = self._prefix.spill(entry, data)
+            else:
+                freed = self._prefix.drop(entry)
+            self.stats["evicted_pages"] += len(freed)
+            got = self._pool.alloc(n)
+        return got
+
+    def _plan_pages(self, prompt, max_new: int, hit):
+        """Reserve every page the request will ever touch (shared prefix
+        + private tail through the last generated token) — admission is
+        all-or-nothing, so a live slot can never run out of pages
+        mid-decode. Returns (shared_page_count j, page row) or None when
+        the pool can't cover it yet (caller defers the request)."""
+        need_total = pages_needed(prompt.size + max_new, self.page_len)
+        if hit is None:
+            priv = self._alloc_evicting(need_total)
+            if priv is None:
+                return None
+            return 0, priv
+        entry, j, tier = hit
+        if tier == "host":
+            n_up = entry.n_pages
+            up = self._alloc_evicting(n_up)
+            if up is None:
+                return None
+            priv = self._alloc_evicting(need_total - j)
+            if priv is None:
+                self._pool.decref(up)
+                return None
+            idx = jnp.asarray(np.asarray(up, np.int32))
+            for k in self._pool_keys:
+                payload = jnp.asarray(entry.host_data[k],
+                                      self.cache[k].dtype)
+                self.cache[k] = self.cache[k].at[:, idx].set(payload)
+            self._prefix.readmit(entry, up)  # alloc ref -> registry ref
+            shared = list(up[:j])
+            self._pool.incref(shared)        # the slot's own reference
+            self.stats["readmitted_pages"] += n_up
+        else:
+            shared = list(entry.pages[:j])
+            self._pool.incref(shared)
+            priv = self._alloc_evicting(need_total - j)
+            if priv is None:
+                self._pool.decref(shared)
+                return None
+        self.stats["prefix_hits"] += 1
+        self.stats["shared_pages"] += j
+        return j, shared + priv
+
+    # ------------------------------------------------------------------
     # Internals.
     # ------------------------------------------------------------------
 
     def _admit(self):
-        """Move queued requests into free slots: recycle (zero) the slots,
-        then length-masked chunked prefill — one jitted dispatch per chunk
-        of `prefill_chunk` positions, all admitted slots together, every
-        other slot bit-frozen."""
+        """Move queued requests into free slots: recycle the slots, then
+        length-masked chunked prefill — one jitted dispatch per chunk of
+        `prefill_chunk` positions, all admitted slots together, every
+        other slot bit-frozen. FIFO with two admission gates (a blocked
+        request blocks everything behind it — no reordering):
+          * skew cap: a candidate needing > prefill_skew_chunks more
+            prefill chunks than its batch-mates waits for its own batch;
+          * page reservation (paged plane): a candidate the pool cannot
+            cover even after evicting cold prefixes is deferred."""
         free = [s for s in range(self.num_slots) if not self._live[s]]
-        batch = []
+        batch = []  # (slot, rid, prompt, tail, max_new)
+        ch_lo = ch_hi = 0
         while free and self._queue:
-            batch.append((free.pop(0),) + tuple(self._queue.popleft()))
+            rid, prompt, max_new = self._queue[0]
+            hit = self._prefix.probe(prompt) if self.paged else None
+            j = hit[1] if hit is not None else 0
+            ch = -(-(prompt.size - j * self.page_len) // self._chunk)
+            if batch:
+                lo, hi = min(ch_lo, ch), max(ch_hi, ch)
+                if hi - lo > self._skew:
+                    self.stats["prefill_pad_chunks_saved"] += (
+                        len(batch) * max(0, ch - ch_hi)
+                        + max(0, ch_lo - ch))
+                    break
+            if self.paged:
+                plan = self._plan_pages(prompt, max_new, hit)
+                if plan is None:
+                    self.stats["admission_deferrals"] += 1
+                    break
+                j, row = plan
+            self._queue.popleft()
+            slot = free.pop(0)
+            ch_lo, ch_hi = (ch, ch) if not batch else (min(ch_lo, ch),
+                                                       max(ch_hi, ch))
+            if self.paged:
+                self._table[slot, :] = self.num_pages
+                self._table[slot, : len(row)] = row
+                self._row_pages[slot] = row
+            self._start[slot] = j * self.page_len if self.paged else 0
+            batch.append((slot, rid, prompt,
+                          prompt[j * self.page_len:] if self.paged
+                          else prompt, max_new))
         if not batch:
             return
         mask = np.zeros((self.num_slots,), bool)
-        for slot, _, _, _ in batch:
+        for slot, _, _, _, _ in batch:
             mask[slot] = True
-        self.cache = self._reset(self.cache, jnp.asarray(mask))
+        self.cache = self._reset(self.cache, jnp.asarray(mask),
+                                 jnp.asarray(self._start))
+        if self.paged:
+            self.cache["pt"] = jnp.asarray(self._table)
 
         c = self._chunk
-        pmax = max(p.size for _, _, p, _ in batch)
+        pmax = max(t.size for _, _, _, t, _ in batch)
         padded = -(-pmax // c) * c
         toks = np.zeros((self.num_slots, padded), np.int32)
         valid = np.zeros((self.num_slots, padded), bool)
-        for slot, _, prompt, _ in batch:
-            toks[slot, : prompt.size] = prompt
-            valid[slot, : prompt.size] = True
+        for slot, _, _, tail, _ in batch:
+            toks[slot, : tail.size] = tail
+            valid[slot, : tail.size] = True
         last = self._last
         for c0 in range(0, padded, c):
             self.cache, last, first = self._prefill(
@@ -232,15 +445,28 @@ class DecodeEngine:
             self.stats["prefill_dispatches"] += 1
         self._last = last
         first = np.asarray(first)
-        for slot, rid, prompt, max_new in batch:
+        for slot, rid, prompt, _, max_new in batch:
             self._rid[slot] = rid
             self._live[slot] = True
             self._gen[slot] = 0
             self._max[slot] = max_new
             self._out[rid] = []
             self._plen[rid] = int(prompt.size)
+            if self.paged:
+                # every full page of the (now fully cached) prompt becomes
+                # shareable — registering here, after the tail prefill,
+                # lets requests admitted mid-flight hit it immediately
+                j_reg = prompt.size // self.page_len
+                if j_reg:
+                    self._prefix.register(prompt,
+                                          self._row_pages[slot][:j_reg])
             # the first output token falls out of the prefill itself
             self._emit(slot, int(first[slot]))
+        if self.paged:
+            used = self._pool.num_used
+            self.stats["pages_in_use"] = used
+            self.stats["peak_pages_in_use"] = max(
+                self.stats["peak_pages_in_use"], used)
 
     def _emit(self, slot: int, tok: int):
         rid = int(self._rid[slot])
@@ -261,3 +487,12 @@ class DecodeEngine:
         self._live[slot] = False
         self._rid[slot] = -1
         self.stats["requests_done"] += 1
+        if self.paged:
+            # O(table) recycle: pages go back to the free list (or stay
+            # alive under their prefix-registry / co-sharing references);
+            # nothing on device is touched — stale pool contents are
+            # unreachable through any live table row
+            self._pool.decref(self._row_pages[slot])
+            self._row_pages[slot] = []
+            self._table[slot, :] = self.num_pages
+            self.stats["pages_in_use"] = self._pool.num_used

@@ -162,6 +162,21 @@ def main():
                     help="batch mode: fused = single jitted scan over the "
                          "prompt (one dispatch); loop = reference "
                          "token-at-a-time oracle")
+    ap.add_argument("--paging", default="auto", choices=["auto", "on", "off"],
+                    help="engine mode KV data plane: auto pages "
+                         "full-attention families (block pool + page "
+                         "tables + prefix sharing), off keeps per-slot "
+                         "contiguous caches, on forces paging")
+    ap.add_argument("--page-len", type=int, default=16,
+                    help="tokens per physical KV page")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="page-pool size (default: slots * cache pages, "
+                         "i.e. the contiguous footprint; set lower to "
+                         "exercise eviction/spill)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common system-prompt tokens "
+                         "to every request; full pages of it are shared "
+                         "physically when paging is on")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -174,14 +189,25 @@ def main():
           else args.min_prompt_len)
     reqs = synthetic_requests(cfg.vocab_size, args.batch, min_len=lo,
                               max_len=args.prompt_len, seed=1)
-    cache_len = args.prompt_len + args.gen + 8
+    if args.shared_prefix:
+        rng = np.random.RandomState(args.seed + 100)
+        sysp = rng.randint(1, cfg.vocab_size,
+                           args.shared_prefix).astype(np.int32)
+        reqs = [np.concatenate([sysp, np.asarray(r, np.int32)])
+                for r in reqs]
+    cache_len = args.shared_prefix + args.prompt_len + args.gen + 8
 
     t0 = time.time()
     if args.mode == "engine":
         from repro.launch.engine import DecodeEngine
         num_slots = args.batch if args.slots is None else args.slots
+        if args.paging != "off":
+            # paging needs cache_len % page_len == 0 (that divisibility is
+            # what makes the paged plane bitwise-identical); round up
+            cache_len = -(-cache_len // args.page_len) * args.page_len
         eng = DecodeEngine(model, params, num_slots=num_slots,
-                           cache_len=cache_len)
+                           cache_len=cache_len, paging=args.paging,
+                           page_len=args.page_len, num_pages=args.num_pages)
         for r in reqs:
             eng.submit(r, max_new_tokens=args.gen)
         done = eng.run()
@@ -191,7 +217,17 @@ def main():
             toks[rid, :len(c.tokens)] = c.tokens
         extra = (f"slots={eng.num_slots} "
                  f"dispatches={eng.stats['decode_dispatches']}d"
-                 f"+{eng.stats['prefill_dispatches']}p")
+                 f"+{eng.stats['prefill_dispatches']}p "
+                 f"paged={'yes' if eng.paged else 'no'}")
+        if eng.paged:
+            s = eng.stats
+            extra += (f" pages={eng.num_pages}x{eng.page_len} "
+                      f"peak_pages={s['peak_pages_in_use']} "
+                      f"prefix_hits={s['prefix_hits']} "
+                      f"shared={s['shared_pages']} "
+                      f"evicted={s['evicted_pages']} "
+                      f"readmitted={s['readmitted_pages']} "
+                      f"cache_mb={eng.cache_bytes() / 2**20:.1f}")
     else:
         prompts, lengths = pad_ragged_prompts(reqs)
         toks = np.asarray(greedy_decode(

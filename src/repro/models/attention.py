@@ -254,6 +254,55 @@ def gqa_attention(cfg: ModelConfig, params, x, th, positions, *,
                  lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
 
 
+def _paged_write(pool, new, pt, pos, active):
+    """One-token scatter through a page table. pool: (N+1, L, ...) with the
+    LAST page reserved as the trash page; new: (B, 1, ...); pt: (B, P)
+    int32; pos: (B,) write index. Row b lands at physical page
+    `pt[b, pos // L]`, offset `pos % L`; inactive rows are redirected to
+    the trash page so a masked step never perturbs live pages (trash
+    contents are unreachable: every table entry mapping it is past the
+    row's valid `pos` range)."""
+    page_len = pool.shape[1]
+    lp = pos // page_len
+    off = pos % page_len
+    phys = jnp.take_along_axis(pt, lp[:, None], axis=1)[:, 0]
+    if active is not None:
+        phys = jnp.where(active, phys, pool.shape[0] - 1)
+    return pool.at[phys, off].set(new[:, 0].astype(pool.dtype))
+
+
+def gqa_decode_paged(cfg: ModelConfig, params, x, th, kpool, vpool, pt,
+                     pos, *, active=None):
+    """One-token GQA decode through a paged KV cache (full-cache only; ring
+    windows keep the contiguous path — their O(W) state doesn't fragment).
+
+    kpool/vpool: (N+1, L, KV, hd) physical page pools shared by every slot
+    (last page = trash); pt: (B, P) int32 page table; pos: (B,) new token
+    index over the P*L logical capacity. The XLA route (`paged_attn_ref`)
+    replicates `attend`'s single-shot math over the table-gathered pages,
+    so with matching logical capacity the output is bitwise identical to
+    `gqa_decode` on a contiguous cache holding the same values; the Pallas
+    route is the TPU paged-gather kernel (allclose-level)."""
+    from repro.kernels import backend as KB
+    qkv = L.linear(params["qkv"], x, th["qkv"])
+    q, k, v = _split_qkv(cfg, qkv)
+    q, k = _qk_norm(cfg, params, th, q, k)
+    posb = pos[:, None]
+    q = L.apply_rope(q, posb, cfg.rope_theta)
+    k = L.apply_rope(k, posb, cfg.rope_theta)
+    kpool = _paged_write(kpool, k, pt, pos, active)
+    vpool = _paged_write(vpool, v, pt, pos, active)
+
+    b = x.shape[0]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = h // kv
+    qr = q[:, 0].reshape(b, kv, g, hd)  # same [kv, g] head grouping as attend
+    out = KB.active().paged_attn(qr, kpool, vpool, pt, pos,
+                                 scale=1.0 / math.sqrt(hd))
+    out = out.reshape(b, 1, h * hd).astype(q.dtype)
+    return L.linear(params["o"], out, th["o"]), kpool, vpool
+
+
 def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
                window=None, active=None):
     """One-token decode. x: (B, 1, D); cache_k/v: (B, S, KV, hd); pos: (B,)
@@ -406,3 +455,68 @@ def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos,
     out = jnp.einsum("bohl,lhv->bohv", lat, w_uv.astype(jnp.float32))
     out = out.reshape(b, 1, h * vd).astype(x.dtype)
     return L.linear(params["o"], out, th["o"]), cache_ckv, cache_krope
+
+
+def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
+                     active=None):
+    """Absorbed-form MLA decode through a paged latent cache.
+
+    latpool: (N+1, L, lr + rope) physical page pool storing the
+    concatenated compressed latent and decoupled-rope key per token (the
+    two contiguous caches of `mla_decode` fused into one pool — slicing
+    the concat back apart is bitwise free); pt: (B, P) int32; pos: (B,).
+
+    The XLA route gathers the latents through the table and then runs
+    `mla_decode`'s exact two-einsum score / post-sum scale / softmax /
+    latent-attend sequence, so it is bitwise identical to the contiguous
+    absorbed decode at matching logical capacity. The Pallas route feeds
+    the generic paged kernel with q = concat(q_lat, q_rope) against the
+    latent pool (kv=1, g=H, dv=lr truncating the value read to the
+    compressed latent)."""
+    from repro.kernels import backend as KB
+    b = x.shape[0]
+    h = cfg.num_heads
+    nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(cfg, params, x, th)  # (B, 1, H, *)
+    posb = pos[:, None]
+    q_rope = L.apply_rope(q_rope, posb, cfg.rope_theta)
+
+    kv_a = L.linear(params["kv_a"], x, th["kv_a"])
+    ckv_new = L.rmsnorm(params["kv_norm"], kv_a[..., :lr], th["kv_norm"],
+                        eps=cfg.norm_eps)
+    krope_new = L.apply_rope(kv_a[..., lr:].reshape(b, 1, 1, rope), posb,
+                             cfg.rope_theta).reshape(b, 1, rope)
+    lat_new = jnp.concatenate([ckv_new, krope_new], axis=-1)  # (B, 1, lr+r)
+    latpool = _paged_write(latpool, lat_new, pt, pos, active)
+
+    w_kv_b = params["kv_b"]["w"].reshape(lr, h, nope + vd)
+    w_uk = w_kv_b[..., :nope]  # (lr, H, nope)
+    w_uv = w_kv_b[..., nope:]  # (lr, H, vd)
+    q_lat = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))  # (B, 1, H, lr)
+
+    if KB.active().paged_impl() == "pallas":
+        q_cat = jnp.concatenate(
+            [q_lat, q_rope.astype(jnp.float32)], axis=-1)  # (B, 1, H, lr+r)
+        lat = KB.active().paged_attn(
+            q_cat, latpool, latpool, pt, pos,
+            scale=1.0 / math.sqrt(nope + rope), dv=lr)  # (B, 1, H, lr)
+    else:
+        # gather + line-for-line replica of mla_decode's absorbed math
+        page_len = latpool.shape[1]
+        s_log = pt.shape[1] * page_len
+        gath = latpool[pt].reshape(b, s_log, lr + rope)
+        cache_ckv, cache_krope = gath[..., :lr], gath[..., lr:]
+        scores = (jnp.einsum("bohl,bsl->bhos", q_lat,
+                             cache_ckv.astype(jnp.float32))
+                  + jnp.einsum("bohr,bsr->bhos", q_rope.astype(jnp.float32),
+                               cache_krope.astype(jnp.float32)))
+        scores = scores / math.sqrt(nope + rope)
+        valid = jnp.arange(s_log)[None, :] <= pos[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)  # (B, H, 1, S)
+        lat = jnp.einsum("bhos,bsl->bohl", w, cache_ckv.astype(jnp.float32))
+    out = jnp.einsum("bohl,lhv->bohv", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * vd).astype(x.dtype)
+    return L.linear(params["o"], out, th["o"]), latpool

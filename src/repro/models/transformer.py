@@ -483,7 +483,8 @@ def _build_decoder(cfg: ModelConfig, rwkv_formulation: str) -> Model:
 
     # ---------------- decode ----------------
 
-    serve_step, init_cache = _make_decoder_serve(cfg, base_spec, base_layout)
+    serve_step, init_cache, init_paged_cache = _make_decoder_serve(
+        cfg, base_spec, base_layout)
 
     def prefill_step(params, batch):
         """Full-sequence forward -> last-position logits (B, V): the
@@ -520,6 +521,8 @@ def _build_decoder(cfg: ModelConfig, rwkv_formulation: str) -> Model:
               serve_step=serve_step, init_cache=init_cache,
               num_params=_count(spec))
     m.prefill_step = prefill_step  # type: ignore[attr-defined]
+    m.init_paged_cache = init_paged_cache  # type: ignore[attr-defined]
+    m.cache_slot_axes = cache_slot_axes  # type: ignore[attr-defined]
     m.base_layout = base_layout  # type: ignore[attr-defined]
     m.trainable_key = "lora" if lora_on else None  # type: ignore
     m.dp_spec = {"lora": lora_tree} if lora_on else spec  # type: ignore
@@ -630,6 +633,43 @@ def _per_example_ce(logits, targets):
 # Decode (serve_step) for the decoder family.
 # ---------------------------------------------------------------------------
 
+# Which axis of each decode-cache tensor indexes the slot (the engine's
+# batch row). Explicit, per cache family — the old engine hardcoded
+# `0 if k == "pos" else 1`, which happened to hold for every family but
+# silently relied on it; paged pools break the pattern (they are SHARED by
+# all slots, axis None) and a wrong axis in the recycle program would
+# cross-contaminate slots without any test tripping locally.
+_SLOT_AXIS_BY_KEY = {
+    "pos": 0, "pt": 0,
+    "conv": 1, "ssm": 1,                       # mamba2 recurrent state
+    "tm_prev": 1, "cm_prev": 1, "wkv": 1,      # rwkv6 recurrent state
+    "shared_k": 1, "shared_v": 1,              # zamba2 shared-attention KV
+    "dec_k": 1, "dec_v": 1, "cross_k": 1, "cross_v": 1,  # enc-dec
+}
+
+
+def cache_slot_axes(cache) -> dict:
+    """Map every decode-cache key to its slot axis (None = slot-free).
+
+    Slot-free tensors (physical page pools) must pass through a slot
+    recycle untouched: zeroing them would destroy other slots' pages.
+    Unknown keys raise — a new cache family must declare its layout here
+    before the engine will recycle it."""
+    out = {}
+    for k in cache:
+        if k in _SLOT_AXIS_BY_KEY:
+            out[k] = _SLOT_AXIS_BY_KEY[k]
+        elif k.endswith(("_kpool", "_vpool", "_latpool")):
+            out[k] = None
+        elif k.endswith(("_k", "_v", "_ckv", "_krope")):
+            out[k] = 1  # per-stack attention caches: (n, B, S, ...)
+        else:
+            raise KeyError(
+                f"decode-cache key {k!r} has no slot-axis entry; add it to "
+                "transformer._SLOT_AXIS_BY_KEY (or a suffix rule) so the "
+                "engine's recycle program knows which axis to mask")
+    return out
+
 
 def _make_decoder_serve(cfg: ModelConfig, spec, layout):
     d = cfg.d_model
@@ -679,6 +719,44 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
             else:
                 cache[f"{name}_k"] = jnp.zeros((n, b, cap, kvh, hd), cfg.dtype)
                 cache[f"{name}_v"] = jnp.zeros((n, b, cap, kvh, hd), cfg.dtype)
+        return cache
+
+    # paging applies to full (position-bounded) attention caches only:
+    # ring windows and recurrent state are O(W)/O(1) per slot and have
+    # nothing to fragment, so those families keep the contiguous plane
+    paged_ok = (not cfg.shared_attention
+                and not ("blocks" in spec and ("m" in spec["blocks"]
+                                               or "tm" in spec["blocks"]))
+                and (cfg.attention_kind == "mla" or window is None))
+
+    def init_paged_cache(batch_size: int, cache_len: int, *, num_pages: int,
+                         page_len: int):
+        """Paged decode cache: per-slot int32 page tables plus physical
+        page pools shared by every slot. Pools carry `num_pages + 1`
+        pages — the extra LAST page is the trash page absorbing writes
+        from inactive rows (attention._paged_write). Tables start fully
+        trash-mapped; the engine overwrites them at admission."""
+        if not paged_ok:
+            raise ValueError(
+                "paged cache is only supported for full-attention decoder "
+                "stacks (ring-window / recurrent families bypass paging)")
+        b = batch_size
+        p_tab = -(-cache_len // page_len)
+        cache = {"pos": jnp.zeros((b,), jnp.int32),
+                 "pt": jnp.full((b, p_tab), num_pages, jnp.int32)}
+        for name in ("dense_blocks", "moe_blocks"):
+            if name not in spec:
+                continue
+            n = spec[name]["attn_norm"]["s"].shape[0]
+            if cfg.attention_kind == "mla":
+                cache[f"{name}_latpool"] = jnp.zeros(
+                    (n, num_pages + 1, page_len,
+                     cfg.kv_lora_rank + cfg.qk_rope_head_dim), cfg.dtype)
+            else:
+                cache[f"{name}_kpool"] = jnp.zeros(
+                    (n, num_pages + 1, page_len, kvh, hd), cfg.dtype)
+                cache[f"{name}_vpool"] = jnp.zeros(
+                    (n, num_pages + 1, page_len, kvh, hd), cfg.dtype)
         return cache
 
     def serve_step(params, cache, batch):
@@ -814,7 +892,31 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                     return {k[len(f"{run_prefix}/{sub}/"):]: inf_b
                             for k in names}
 
-                if cfg.attention_kind == "mla":
+                if cfg.attention_kind == "mla" and "pt" in cache:
+                    def body(h, xs, mk=mk, moe_layer=moe_layer):
+                        bp, latpool = xs
+                        hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
+                                       eps=cfg.norm_eps)
+                        att, lat_n = A.mla_decode_paged(
+                            cfg, bp["attn"], hn, mk("attn"), latpool,
+                            cache["pt"], pos, active=active)
+                        h = h + att
+                        hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
+                                       eps=cfg.norm_eps)
+                        if moe_layer:
+                            moe_fn = (MOE.moe_block_grouped
+                                      if cfg.moe_dispatch == "grouped"
+                                      else MOE.moe_block)
+                            y, _ = moe_fn(cfg, bp["moe"], hn, mk("moe"))
+                        else:
+                            y = L.swiglu(bp["mlp"], hn, mk("mlp"),
+                                         f=cfg.d_ff)
+                        return h + y, lat_n
+
+                    x, lat_n = jax.lax.scan(
+                        body, x, (params[name], cache[f"{name}_latpool"]))
+                    new_cache[f"{name}_latpool"] = lat_n
+                elif cfg.attention_kind == "mla":
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
                         bp, ckv, krope = xs
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
@@ -840,6 +942,32 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                                   cache[f"{name}_krope"]))
                     new_cache[f"{name}_ckv"] = ckv_n
                     new_cache[f"{name}_krope"] = kr_n
+                elif "pt" in cache:
+                    def body(h, xs, mk=mk, moe_layer=moe_layer):
+                        bp, kpool, vpool = xs
+                        hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
+                                       eps=cfg.norm_eps)
+                        att, kp_n, vp_n = A.gqa_decode_paged(
+                            cfg, bp["attn"], hn, mk("attn"), kpool, vpool,
+                            cache["pt"], pos, active=active)
+                        h = h + att
+                        hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
+                                       eps=cfg.norm_eps)
+                        if moe_layer:
+                            moe_fn = (MOE.moe_block_grouped
+                                      if cfg.moe_dispatch == "grouped"
+                                      else MOE.moe_block)
+                            y, _ = moe_fn(cfg, bp["moe"], hn, mk("moe"))
+                        else:
+                            y = L.swiglu(bp["mlp"], hn, mk("mlp"),
+                                         f=cfg.d_ff)
+                        return h + y, (kp_n, vp_n)
+
+                    x, (kp_n, vp_n) = jax.lax.scan(
+                        body, x, (params[name], cache[f"{name}_kpool"],
+                                  cache[f"{name}_vpool"]))
+                    new_cache[f"{name}_kpool"] = kp_n
+                    new_cache[f"{name}_vpool"] = vp_n
                 else:
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
                         bp, ck, cv = xs
@@ -874,7 +1002,7 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                             else pos + active.astype(jnp.int32))
         return logits[:, 0], new_cache
 
-    return serve_step, init_cache
+    return serve_step, init_cache, (init_paged_cache if paged_ok else None)
 
 
 # ---------------------------------------------------------------------------
@@ -1061,4 +1189,6 @@ def _build_encdec(cfg: ModelConfig) -> Model:
     model.prefill_cross = prefill_cross  # type: ignore[attr-defined]
     model.encode = encode  # type: ignore[attr-defined]
     model.prefill_step = prefill_step  # type: ignore[attr-defined]
+    model.init_paged_cache = None  # type: ignore[attr-defined]
+    model.cache_slot_axes = cache_slot_axes  # type: ignore[attr-defined]
     return model

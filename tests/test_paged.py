@@ -1,0 +1,384 @@
+"""Paged KV-cache data plane.
+
+Four layers of guarantees, bottom-up:
+  * launch.pages unit behavior — allocator refcounts, LIFO reuse, the
+    full-page prefix registry (longest-hit probe, dedupe, LRU eviction,
+    host spill / readmit key movement);
+  * kernels — the Pallas paged-gather decode kernel matches the XLA
+    gather reference over ragged page tables and partially filled last
+    pages (through the backend engine registration, both families);
+  * the per-family slot-axis spec the engine's recycle program is built
+    from (a wrong axis would cross-contaminate slots silently);
+  * engine-level bitwise invariants — prefix sharing (including a
+    request admitted mid-flight against a live slot's registered
+    prefix), evict -> host-spill -> readmit token roundtrip, skew-capped
+    admission, and page-reservation deferral — all token-for-token
+    against the per-request `greedy_decode(prefill="loop")` oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.spec import init_params
+from repro.kernels import backend
+from repro.launch.engine import DecodeEngine
+from repro.launch.pages import PagePool, PrefixStore, pages_needed
+from repro.launch.serve import greedy_decode
+from repro.models.transformer import build_model, cache_slot_axes
+
+
+def _build(arch):
+    cfg = get_config(arch, reduced=(arch != "tiny"))
+    model = build_model(cfg)
+    params = init_params(model.spec, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _oracle(model, params, prompt, gen, cache_len):
+    return np.asarray(greedy_decode(
+        model, params, jnp.asarray(prompt)[None], gen, cache_len,
+        prefill="loop"))[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# launch.pages units (pure host state, no model).
+# ---------------------------------------------------------------------------
+
+
+def test_pages_needed():
+    assert pages_needed(1, 16) == 1
+    assert pages_needed(16, 16) == 1
+    assert pages_needed(17, 16) == 2
+    assert pages_needed(0, 16) == 0
+
+
+def test_pool_alloc_refcount_free():
+    pool = PagePool(4, 16)
+    a = pool.alloc(3)
+    assert len(a) == 3 and pool.num_free == 1 and pool.num_used == 3
+    assert pool.alloc(2) is None  # over-alloc is atomic: nothing taken
+    assert pool.num_free == 1
+    pool.incref([a[0]])
+    assert pool.decref([a[0]]) == []      # rc 2 -> 1: not freed
+    assert pool.decref(a) == a            # rc 1 -> 0: all freed
+    assert pool.num_free == 4
+    with pytest.raises(ValueError):
+        pool.decref([a[0]])               # double free
+    with pytest.raises(ValueError):
+        pool.incref([a[0]])               # incref of free page
+
+
+def test_pool_lifo_reuse():
+    pool = PagePool(4, 8)
+    a = pool.alloc(2)
+    pool.decref(a)
+    b = pool.alloc(2)
+    assert b == a[::-1]  # most recently freed first
+
+
+def test_prefix_probe_longest_and_tail_token_rule():
+    pool = PagePool(8, 4)
+    store = PrefixStore(pool)
+    toks = np.arange(100, 112, dtype=np.int32)  # 3 full pages of 4
+    pages = pool.alloc(3)
+    assert store.register(toks, pages)
+    # longest full-page prefix wins
+    probe = store.probe(np.concatenate([toks, [7, 8]]))
+    assert probe is not None and probe[1] == 3 and probe[2] == "device"
+    # shorter prompts hit their page-truncated subkey
+    assert store.probe(toks[:9])[1] == 2
+    # the LAST prompt token is never covered by a hit (it must be
+    # prefilled to produce the true-last-token logits): an exact-page
+    # prompt hits j = pages - 1, not pages
+    assert store.probe(toks)[1] == 2
+    assert store.probe(toks[:4]) is None  # one page = its own tail token
+    # no match at all
+    assert store.probe(np.asarray([1, 2, 3], np.int32)) is None
+    # registering the same full key again dedupes without increfs
+    rc_before = [pool.refcount(p) for p in pages]
+    assert not store.register(toks, pages)
+    assert [pool.refcount(p) for p in pages] == rc_before
+
+
+def test_prefix_evict_spill_readmit_key_movement():
+    pool = PagePool(8, 4)
+    store = PrefixStore(pool)
+    t1 = np.arange(0, 8, dtype=np.int32)
+    t2 = np.arange(50, 58, dtype=np.int32)
+    p1, p2 = pool.alloc(2), pool.alloc(2)
+    store.register(t1, p1)
+    store.register(t2, p2)
+    pool.decref(p1), pool.decref(p2)  # slots retire: registry refs remain
+    store.probe(np.concatenate([t1, [9]]))  # touch t1 -> t2 is LRU
+    entry = store.evict_lru()
+    assert entry.tokens.tolist() == t2.tolist()
+    freed = store.spill(entry, {"k": np.zeros((1, 2, 4, 3))})
+    assert sorted(freed) == sorted(p2)
+    assert entry.tier == "host" and entry.n_pages == 2
+    # host-tier hit, then readmission moves the keys back to device
+    assert store.probe(np.concatenate([t2, [9]]))[2] == "host"
+    np_pages = pool.alloc(2)
+    store.readmit(entry, np_pages)
+    assert store.probe(np.concatenate([t2, [9]]))[2] == "device"
+    assert store.num_host_entries == 0 and store.num_device_entries == 2
+
+
+def test_prefix_evictable_pages_counts_registry_only_refs():
+    pool = PagePool(8, 4)
+    store = PrefixStore(pool)
+    toks = np.arange(0, 8, dtype=np.int32)
+    pages = pool.alloc(2)
+    store.register(toks, pages)
+    pool.decref(pages)  # registering slot retires
+    pool.incref([pages[0]])  # page 0 re-shared by a live slot
+    assert store.evictable_pages() == 1
+
+
+# ---------------------------------------------------------------------------
+# Kernel: pallas paged-gather == xla gather reference (backend engines).
+# ---------------------------------------------------------------------------
+
+# b, kv, g, dq, dv, pool pages, page_len, table pages
+PAGED_SHAPES = [
+    (3, 2, 2, 16, None, 7, 8, 3),
+    (2, 1, 4, 24, 16, 5, 4, 4),    # MLA-style: aliased pool, dv truncation
+    (1, 2, 1, 8, None, 3, 16, 2),
+    (4, 1, 1, 4, None, 9, 2, 5),
+]
+
+
+@pytest.mark.parametrize("b,kv,g,dq,dv,n,L,P", PAGED_SHAPES)
+def test_paged_attn_backend_parity(b, kv, g, dq, dv, n, L, P):
+    key = jax.random.PRNGKey(b * 7 + dq)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    q = jax.random.normal(k1, (b, kv, g, dq))
+    kpool = jax.random.normal(k2, (n, L, kv, dq))
+    vpool = kpool if dv is not None else jax.random.normal(k3, (n, L, kv, dq))
+    pt = jax.random.randint(k4, (b, P), 0, n)
+    # ragged validity incl. the edge cases: a single valid token, a
+    # partially filled last page, and a completely full table
+    pos = np.full((b,), P * L // 2, np.int32)
+    pos[0] = 0
+    pos[-1] = P * L - 1
+    pos = jnp.asarray(pos)
+    scale = 1.0 / np.sqrt(dq)
+
+    xla = backend.make_engine("xla")
+    pls = backend.make_engine("pallas", interpret=True)
+    assert xla.paged_impl() == "xla" and pls.paged_impl() == "pallas"
+    ref = xla.paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
+    ker = pls.paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_paged_impl_auto_routing():
+    # off-TPU the auto engine stays on the bitwise xla gather path unless
+    # interpret-mode kernels are forced
+    auto = backend.make_engine("auto")
+    on_tpu = jax.default_backend() == "tpu"
+    assert auto.paged_impl() == ("pallas" if on_tpu else "xla")
+    assert backend.make_engine("auto", interpret=True).paged_impl() == \
+        "pallas"
+
+
+# ---------------------------------------------------------------------------
+# Slot-axis spec across cache families.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["tiny", "deepseek-v3-671b", "zamba2-7b",
+                                  "rwkv6-7b", "whisper-medium"])
+def test_cache_slot_axes_families(arch):
+    """Every contiguous-cache tensor's declared slot axis really is the
+    slot axis: its extent equals the slot count."""
+    cfg = get_config(arch, reduced=(arch != "tiny"))
+    model = build_model(cfg)
+    cache = model.init_cache(3, 16)
+    axes = model.cache_slot_axes(cache)
+    assert set(axes) == set(cache)
+    assert axes["pos"] == 0
+    for k, v in cache.items():
+        assert axes[k] is not None, (arch, k)
+        assert v.shape[axes[k]] == 3, (arch, k)
+
+
+def test_cache_slot_axes_paged_and_unknown():
+    cfg, model, _ = _build("tiny")
+    cache = model.init_paged_cache(3, 32, num_pages=6, page_len=16)
+    axes = model.cache_slot_axes(cache)
+    assert axes["pos"] == 0 and axes["pt"] == 0
+    pools = [k for k in cache if k.endswith(("_kpool", "_vpool",
+                                             "_latpool"))]
+    assert pools and all(axes[k] is None for k in pools)
+    with pytest.raises(KeyError, match="slot-axis"):
+        cache_slot_axes({"mystery": jnp.zeros((2, 2))})
+
+
+def test_paged_cache_unsupported_families():
+    cfg, model, params = _build("rwkv6-7b")
+    assert model.init_paged_cache is None
+    eng = DecodeEngine(model, params, num_slots=2, cache_len=32)
+    assert not eng.paged  # auto falls back to the contiguous plane
+    with pytest.raises(ValueError, match="paging"):
+        DecodeEngine(model, params, num_slots=2, cache_len=32, paging="on")
+    # divisibility is part of the bitwise guarantee: auto declines too
+    cfg2, model2, params2 = _build("tiny")
+    eng2 = DecodeEngine(model2, params2, num_slots=2, cache_len=30,
+                        page_len=16)
+    assert not eng2.paged
+
+
+# ---------------------------------------------------------------------------
+# Engine-level bitwise invariants.
+# ---------------------------------------------------------------------------
+
+
+def test_engine_prefix_sharing_bitwise_incl_midflight():
+    """Requests sharing a system prompt map the same physical pages —
+    including one admitted mid-flight against a slot that is still
+    decoding — and stay token-for-token with the unshared oracle."""
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(7)
+    sys_p = rng.randint(1, cfg.vocab_size, 37).astype(np.int32)  # 2 pages
+
+    def req(n):
+        return np.concatenate(
+            [sys_p, rng.randint(1, cfg.vocab_size, n).astype(np.int32)])
+
+    eng = DecodeEngine(model, params, num_slots=2, cache_len=64,
+                       page_len=16)
+    assert eng.paged
+    r0, r1, r2 = req(3), req(11), req(6)
+    rid0 = eng.submit(r0, max_new_tokens=16)
+    for _ in range(4):  # r0 admitted (prefix registered) and mid-decode
+        eng.step()
+    rid1 = eng.submit(r1, max_new_tokens=8)
+    rid2 = eng.submit(r2, max_new_tokens=8)
+    done = eng.run()
+    assert eng.stats["prefix_hits"] >= 2
+    assert eng.stats["shared_pages"] >= 4
+    for rid, r, g in [(rid0, r0, 16), (rid1, r1, 8), (rid2, r2, 8)]:
+        assert done[rid].tokens == _oracle(model, params, r, g, 64), rid
+
+
+def test_engine_evict_spill_readmit_roundtrip():
+    """A prefix evicted to the host tier re-admits bitwise: the resumed
+    request decodes token-for-token as if its pages never left."""
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(1)
+    sys_p = rng.randint(1, cfg.vocab_size, 35).astype(np.int32)
+
+    def req(n):
+        return np.concatenate(
+            [sys_p, rng.randint(1, cfg.vocab_size, n).astype(np.int32)])
+
+    eng = DecodeEngine(model, params, num_slots=1, cache_len=64,
+                       page_len=16, num_pages=4)
+    r1 = req(5)                                                   # 40 tok
+    r2 = rng.randint(1, cfg.vocab_size, 30).astype(np.int32)      # 4 pages
+    r3 = req(9)                                                   # 44 tok
+    rid1 = eng.submit(r1, max_new_tokens=8)
+    eng.run()
+    # r2 needs the whole pool -> the registered sys prefix spills to host
+    rid2 = eng.submit(r2, max_new_tokens=26)
+    eng.run()
+    assert eng.stats["evicted_pages"] >= 2
+    # r3 hits the host tier -> pages re-uploaded and re-shared
+    rid3 = eng.submit(r3, max_new_tokens=8)
+    done = eng.run()
+    assert eng.stats["readmitted_pages"] >= 2
+    assert eng.stats["prefix_hits"] >= 1
+    for rid, r, g in [(rid1, r1, 8), (rid2, r2, 26), (rid3, r3, 8)]:
+        assert done[rid].tokens == _oracle(model, params, r, g, 64), rid
+
+
+def test_engine_spill_disabled_drops_prefix():
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(3)
+    r1 = rng.randint(1, cfg.vocab_size, 20).astype(np.int32)
+    r2 = rng.randint(1, cfg.vocab_size, 30).astype(np.int32)
+    eng = DecodeEngine(model, params, num_slots=1, cache_len=64,
+                       page_len=16, num_pages=4, host_spill=False)
+    rid1 = eng.submit(r1, max_new_tokens=8)
+    eng.run()
+    rid2 = eng.submit(r2, max_new_tokens=26)  # forces eviction (drop)
+    done = eng.run()
+    assert eng.stats["evicted_pages"] >= 1
+    assert eng.stats["readmitted_pages"] == 0
+    for rid, r, g in [(rid1, r1, 8), (rid2, r2, 26)]:
+        assert done[rid].tokens == _oracle(model, params, r, g, 64), rid
+
+
+def test_engine_admission_skew_bucketing():
+    """A short prompt is no longer dragged through a long co-admission's
+    padded chunk grid; outputs stay oracle-exact either way."""
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(9)
+    short = rng.randint(1, cfg.vocab_size, 4).astype(np.int32)
+    long = rng.randint(1, cfg.vocab_size, 40).astype(np.int32)
+
+    def serve(**kw):
+        eng = DecodeEngine(model, params, num_slots=2, cache_len=64,
+                           prefill_chunk=4, **kw)
+        rids = [eng.submit(short, max_new_tokens=4),
+                eng.submit(long, max_new_tokens=4)]
+        done = eng.run()
+        return eng, [done[r].tokens for r in rids]
+
+    eng, toks = serve()
+    assert eng.stats["prefill_pad_chunks_saved"] > 0
+    # effectively-unbounded skew co-admits everything (the old behavior)
+    eng_all, toks_all = serve(prefill_skew_chunks=10 ** 6)
+    assert eng_all.stats["prefill_pad_chunks_saved"] == 0
+    assert toks == toks_all
+    oracle = [_oracle(model, params, short, 4, 64),
+              _oracle(model, params, long, 4, 64)]
+    assert toks == oracle
+
+
+def test_engine_page_reservation_deferral_fifo():
+    """Admission reserves every page a request will touch; when the pool
+    can't cover the next queued request it defers (FIFO preserved) and
+    admits once pages free up — tokens unaffected."""
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(11)
+    r1 = rng.randint(1, cfg.vocab_size, 20).astype(np.int32)
+    r2 = rng.randint(1, cfg.vocab_size, 20).astype(np.int32)
+    eng = DecodeEngine(model, params, num_slots=2, cache_len=32,
+                       page_len=16, num_pages=3)
+    rid1 = eng.submit(r1, max_new_tokens=8)
+    rid2 = eng.submit(r2, max_new_tokens=8)
+    done = eng.run()
+    assert eng.stats["admission_deferrals"] >= 1
+    assert eng.stats["requests_done"] == 2
+    for rid, r in [(rid1, r1), (rid2, r2)]:
+        assert done[rid].tokens == _oracle(model, params, r, 8, 32), rid
+    # a request the pool could never cover is rejected at submit (the
+    # pool here is smaller than the slots' logical capacity)
+    small = DecodeEngine(model, params, num_slots=1, cache_len=64,
+                         page_len=16, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        small.submit(rng.randint(1, cfg.vocab_size, 30).astype(np.int32),
+                     max_new_tokens=8)  # 38 tokens -> 3 pages > pool of 2
+
+
+def test_engine_paged_stats_and_cache_bytes():
+    cfg, model, params = _build("tiny")
+    rng = np.random.RandomState(13)
+    reqs = [rng.randint(1, cfg.vocab_size, n).astype(np.int32)
+            for n in (5, 9, 13)]
+    paged = DecodeEngine(model, params, num_slots=3, cache_len=64,
+                         page_len=16)
+    contig = DecodeEngine(model, params, num_slots=3, cache_len=64,
+                          paging="off")
+    for r in reqs:
+        paged.submit(r, max_new_tokens=6)
+        contig.submit(r, max_new_tokens=6)
+    paged.run(), contig.run()
+    assert paged.stats["peak_live_slots"] == 3
+    assert paged.stats["live_slot_steps"] >= 3
+    assert paged.stats["peak_pages_in_use"] >= 3
+    assert paged.cache_bytes() > 0 and contig.cache_bytes() > 0
