@@ -35,6 +35,50 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         --paging on --page-len 8 --num-pages 12
 cd scripts
 
+# ---- crash-safe service smoke: the REAL kill -9 variant of the fault
+# matrix (tier-1 runs the same points in-process via tests/test_service.py).
+# A reference service runs 8 steps uninterrupted; a second one is killed
+# by --fault-at (os._exit mid-publish) and resumed. The resumed run must
+# be bitwise identical to the reference — checkpoint shards, sampler
+# stream, AND ledger bytes — and the replayed epsilon must be monotone.
+cd ..
+SVC_ROOT="$(mktemp -d /tmp/repro_svc_ci.XXXXXX)"
+SVC_ARGS=(--arch tiny --steps 8 --batch 8 --seq 32 --docs 64 --sigma 0.8
+          --checkpoint-every 3 --log-every 100)
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.service --service-dir "$SVC_ROOT/ref" \
+        "${SVC_ARGS[@]}"
+for fault in post-ledger-append:5 pre-ckpt-rename:6; do
+    dir="$SVC_ROOT/fault-${fault//:/-}"
+    rc=0
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.launch.service --service-dir "$dir" \
+            "${SVC_ARGS[@]}" --fault-at "$fault" || rc=$?
+    [ "$rc" -eq 86 ] || { echo "fault $fault: expected exit 86, got $rc"; exit 1; }
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m repro.launch.service --service-dir "$dir" "${SVC_ARGS[@]}"
+done
+PYTHONPATH="src:tests${PYTHONPATH:+:$PYTHONPATH}" python - "$SVC_ROOT" <<'EOF'
+import sys
+import faults
+from repro.core.accounting import RdpAccountant
+root = sys.argv[1]
+ref = faults.state_digest(f"{root}/ref")
+for fault in ("post-ledger-append-5", "pre-ckpt-rename-6"):
+    got = faults.state_digest(f"{root}/fault-{fault}")
+    assert got == ref, f"{fault}: resumed state differs from reference"
+recs = faults.ledger_records(f"{root}/ref")
+acct, eps_seq = RdpAccountant(), []
+for r in recs:
+    acct.spend(r["q"], r["sigma"])
+    eps_seq.append(acct.epsilon(1e-5))
+assert eps_seq == sorted(eps_seq) and eps_seq[0] > 0, "epsilon not monotone"
+print(f"service smoke OK: {len(recs)} ledgered steps, "
+      f"eps={eps_seq[-1]:.4f}, kill/resume bitwise-identical")
+EOF
+rm -rf "$SVC_ROOT"
+cd scripts
+
 # ---- sharded stage: the multi-device engine on 8 virtual CPU devices ----
 # Runs the full sharded check suite (parity + the zero-model-axis-norm-
 # collectives HLO assertion) with the forced device count, then a quick

@@ -1,3 +1,11 @@
-from repro.checkpoint.store import load_checkpoint, save_checkpoint, latest_step
+from repro.checkpoint.store import (
+    CheckpointCorrupt, all_steps, latest_step, latest_verified_step,
+    load_checkpoint, load_latest_checkpoint, load_manifest, save_checkpoint,
+    verify_checkpoint,
+)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = [
+    "CheckpointCorrupt", "all_steps", "latest_step", "latest_verified_step",
+    "load_checkpoint", "load_latest_checkpoint", "load_manifest",
+    "save_checkpoint", "verify_checkpoint",
+]

@@ -10,6 +10,16 @@ very large checkpoints stream instead of materializing one blob. Restore
 reconstructs on host then (optionally) device_puts with a target sharding
 tree — on the production mesh each process would pass its addressable
 shardings; on CPU it's a plain load.
+
+Crash safety: `save_checkpoint` stages everything in a `tmp-` sibling
+directory, fsyncs each file and the parent directory, then `os.replace`s it
+into place — a kill at any point leaves either the complete old state or the
+complete new state, never a half-written step directory (`latest_step` only
+matches `step_<N>` names, so orphaned `tmp-` stages are invisible). Every
+leaf carries a crc32 in the manifest; `verify_checkpoint` /
+`load_checkpoint(verify=True)` detect torn or bit-rotted shards instead of
+deserializing them into garbage, and `load_latest_checkpoint` walks back to
+the newest step that verifies.
 """
 from __future__ import annotations
 
@@ -57,10 +67,47 @@ def _leaf_meta(x) -> dict:
     return {"shape": list(arr.shape), "dtype": str(arr.dtype)}
 
 
+class CheckpointCorrupt(ValueError):
+    """A checkpoint step failed checksum / structural verification."""
+
+
+def _fsync_write(path: str, data: bytes) -> None:
+    with open(path, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def _fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save_checkpoint(directory: str, step: int, tree,
-                    *, shard_bytes: int = _SHARD_BYTES) -> str:
-    path = os.path.join(directory, f"step_{step:08d}")
-    os.makedirs(path, exist_ok=True)
+                    *, shard_bytes: int = _SHARD_BYTES, meta: dict | None = None,
+                    fault_hook=None) -> str:
+    """Atomically persist `tree` as `<directory>/step_<step>`.
+
+    All files are staged under a `tmp-step_<step>-<pid>` sibling, fsynced,
+    and published with a single `os.replace` — the step directory either
+    exists complete or not at all. `meta` (msgpack-able dict) rides in the
+    manifest; the training service stores sampler RNG state and the ledger
+    offset there. `fault_hook(stage)` is a test seam: the fault-injection
+    harness kills the process at "pre-stage" / "pre-rename" / "post-rename"
+    to prove the atomicity claim.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    stage = os.path.join(directory, f"tmp-step_{step:08d}-{os.getpid()}")
+    if fault_hook is not None:
+        fault_hook("pre-stage")
+    if os.path.isdir(stage):  # leftover from a crashed save: rebuild
+        import shutil
+        shutil.rmtree(stage)
+    os.makedirs(stage)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     metas = []
     shards: list[list[bytes]] = [[]]
@@ -79,12 +126,13 @@ def save_checkpoint(directory: str, step: int, tree,
         shards[-1].append(raw)
         cur += len(raw)
         metas.append({"shape": list(arr.shape), "dtype": dtype,
-                      "shard": len(shards) - 1, "bytes": len(raw)})
+                      "shard": len(shards) - 1, "bytes": len(raw),
+                      "crc32": zlib.crc32(raw)})
     codec, compress = _compressor()
     suffix = _SHARD_SUFFIX[codec]  # extension stays truthful to the codec
     for i, blobs in enumerate(shards):
-        with open(os.path.join(path, f"shard_{i:04d}{suffix}"), "wb") as f:
-            f.write(compress(b"".join(blobs)))
+        _fsync_write(os.path.join(stage, f"shard_{i:04d}{suffix}"),
+                     compress(b"".join(blobs)))
     # treedef blob is advisory only (restore uses the caller's template);
     # proto serialization rejects user-defined nodes (NamedTuple states)
     try:
@@ -98,13 +146,72 @@ def save_checkpoint(directory: str, step: int, tree,
         "num_shards": len(shards),
         "leaves": metas,
         "step": step,
+        "meta": meta,
     }
-    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-    return path
+    _fsync_write(os.path.join(stage, "manifest.msgpack"),
+                 msgpack.packb(manifest))
+    _fsync_dir(stage)
+    if fault_hook is not None:
+        fault_hook("pre-rename")
+    if os.path.isdir(final):
+        # re-publishing a step that already exists: shunt the old directory
+        # aside atomically so `final` is free for the (atomic) replace, then
+        # drop it — at every instant a complete version of the step exists
+        import shutil
+        trash = os.path.join(directory, f"tmp-old_{step:08d}-{os.getpid()}")
+        if os.path.isdir(trash):
+            shutil.rmtree(trash)
+        os.replace(final, trash)
+        os.replace(stage, final)
+        shutil.rmtree(trash)
+    else:
+        os.replace(stage, final)
+    _fsync_dir(directory)
+    if fault_hook is not None:
+        fault_hook("post-rename")
+    return final
 
 
-def load_checkpoint(directory: str, step: int, template, *, shardings=None):
+def load_manifest(directory: str, step: int) -> dict:
+    """Read a step's manifest (shapes, codec, checksums, and `meta`)."""
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.msgpack")
+    with open(path, "rb") as f:
+        return msgpack.unpackb(f.read())
+
+
+def verify_checkpoint(directory: str, step: int) -> bool:
+    """True iff every shard decompresses and every leaf crc32 matches.
+
+    Checkpoints written before checksums existed (no "crc32" in the leaf
+    meta) verify structurally only (shards present, sizes consistent).
+    """
+    path = os.path.join(directory, f"step_{step:08d}")
+    try:
+        with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+            manifest = msgpack.unpackb(f.read())
+        codec = manifest.get("codec", "zstd")
+        decompress = _decompressor(codec)
+        suffix = _SHARD_SUFFIX[codec]
+        shard_data = []
+        for i in range(manifest["num_shards"]):
+            with open(os.path.join(path, f"shard_{i:04d}{suffix}"), "rb") as f:
+                shard_data.append(decompress(f.read()))
+        offsets = [0] * manifest["num_shards"]
+        for m in manifest["leaves"]:
+            s, nbytes = m["shard"], m["bytes"]
+            raw = shard_data[s][offsets[s]: offsets[s] + nbytes]
+            offsets[s] += nbytes
+            if len(raw) != nbytes:
+                return False
+            if "crc32" in m and zlib.crc32(raw) != m["crc32"]:
+                return False
+        return True
+    except Exception:
+        return False
+
+
+def load_checkpoint(directory: str, step: int, template, *, shardings=None,
+                    verify: bool = False):
     """Restore into the structure of `template` (shapes must match).
 
     shardings: optional pytree mirroring `template` leaf-for-leaf whose
@@ -115,6 +222,10 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None):
     tests/sharded_checks.py's checkpoint round-trip check. Build it with
     e.g. ``{"params": params_shardings(spec, mesh), "opt": tree of None}``
     (``jax.tree_util.tree_map(lambda _: None, subtree)``).
+
+    verify: check every leaf's crc32 against the manifest before
+    deserializing; a mismatch (torn shard, bit rot) raises
+    `CheckpointCorrupt` instead of returning garbage arrays.
     """
     path = os.path.join(directory, f"step_{step:08d}")
     with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
@@ -125,13 +236,24 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None):
     shard_data = []
     for i in range(manifest["num_shards"]):
         with open(os.path.join(path, f"shard_{i:04d}{suffix}"), "rb") as f:
-            shard_data.append(decompress(f.read()))
+            try:
+                shard_data.append(decompress(f.read()))
+            except Exception as e:
+                raise CheckpointCorrupt(
+                    f"{path}: shard {i} failed to decompress: {e}") from e
     offsets = [0] * manifest["num_shards"]
     leaves = []
-    for meta in manifest["leaves"]:
+    for li, meta in enumerate(manifest["leaves"]):
         s, nbytes = meta["shard"], meta["bytes"]
         raw = shard_data[s][offsets[s]: offsets[s] + nbytes]
         offsets[s] += nbytes
+        if len(raw) != nbytes:
+            raise CheckpointCorrupt(
+                f"{path}: shard {s} truncated at leaf {li} "
+                f"(wanted {nbytes} bytes, got {len(raw)})")
+        if verify and "crc32" in meta and zlib.crc32(raw) != meta["crc32"]:
+            raise CheckpointCorrupt(
+                f"{path}: leaf {li} crc mismatch (torn write?)")
         if meta["dtype"] == "bfloat16":
             arr = np.frombuffer(raw, np.uint16).reshape(meta["shape"])
             leaves.append(jnp.asarray(arr).view(jnp.bfloat16))
@@ -163,3 +285,35 @@ def latest_step(directory: str) -> int | None:
     steps = [int(m.group(1)) for d in os.listdir(directory)
              if (m := re.match(r"step_(\d+)$", d))]
     return max(steps) if steps else None
+
+
+def all_steps(directory: str) -> list[int]:
+    """All step numbers present (complete or not), descending."""
+    if not os.path.isdir(directory):
+        return []
+    return sorted((int(m.group(1)) for d in os.listdir(directory)
+                   if (m := re.match(r"step_(\d+)$", d))), reverse=True)
+
+
+def latest_verified_step(directory: str) -> int | None:
+    """Newest step whose shards all pass checksum verification."""
+    for step in all_steps(directory):
+        if verify_checkpoint(directory, step):
+            return step
+    return None
+
+
+def load_latest_checkpoint(directory: str, template, *, shardings=None):
+    """Load the newest checkpoint that verifies; skip corrupt steps.
+
+    Returns (step, tree, manifest) or None when no step verifies. A torn or
+    bit-rotted newest step (detected by crc / decompress failure) falls back
+    to the next older step rather than aborting the resume.
+    """
+    for step in all_steps(directory):
+        if not verify_checkpoint(directory, step):
+            continue
+        tree = load_checkpoint(directory, step, template,
+                               shardings=shardings, verify=True)
+        return step, tree, load_manifest(directory, step)
+    return None

@@ -122,8 +122,16 @@ def rdp_sampled_gaussian(
     q: float, sigma: float, steps: int, orders: Sequence[float] = DEFAULT_ORDERS
 ) -> np.ndarray:
     """RDP (per order) of `steps` compositions of the sampled Gaussian."""
-    if sigma <= 0:
-        return np.full(len(orders), np.inf)
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"sampling rate q must be in [0, 1], got {q}")
+    if not math.isfinite(sigma) or sigma <= 0:
+        raise ValueError(f"noise multiplier sigma must be positive, got {sigma}")
+    if steps < 0:
+        raise ValueError(f"steps must be non-negative, got {steps}")
+    if len(orders) == 0:
+        raise ValueError("order grid is empty")
+    if any(a <= 1.0 for a in orders):
+        raise ValueError("all RDP orders must be > 1")
     if q == 0:
         return np.zeros(len(orders))
     out = np.empty(len(orders))
@@ -144,6 +152,15 @@ def rdp_to_eps(
     """Tight RDP -> (eps, delta) conversion (CKS'20 / TF-privacy)."""
     orders_arr = np.asarray(orders, dtype=float)
     rdp = np.asarray(rdp, dtype=float)
+    if orders_arr.size == 0:
+        raise ValueError("order grid is empty")
+    if rdp.shape != orders_arr.shape:
+        raise ValueError(
+            f"rdp grid has shape {rdp.shape}, orders {orders_arr.shape}")
+    if np.any(orders_arr <= 1.0):
+        raise ValueError("all RDP orders must be > 1")
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
     with np.errstate(over="ignore", invalid="ignore"):
         eps = (
             rdp
@@ -180,6 +197,13 @@ def calibrate_sigma(
     """Smallest sigma achieving <= target_eps, by bisection."""
     if target_eps <= 0:
         raise ValueError("target_eps must be positive")
+    if not 0.0 < sampling_rate <= 1.0:
+        raise ValueError(
+            f"sampling_rate must be in (0, 1], got {sampling_rate}")
+    if steps <= 0:
+        raise ValueError(f"steps must be positive, got {steps}")
+    if not 0.0 < delta < 1.0:
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
     # grow hi until feasible
     while compute_epsilon(
         sigma=sigma_hi, sampling_rate=sampling_rate, steps=steps, delta=delta
@@ -234,3 +258,78 @@ def sigma_b_for_fraction(sigma: float, num_groups: int, r: float) -> float:
     if not 0.0 < r < 1.0:
         raise ValueError("r must be in (0, 1)")
     return math.sqrt(num_groups * sigma * sigma / (4.0 * r))
+
+
+# ---------------------------------------------------------------------------
+# Incremental accountant (ledger replay).
+# ---------------------------------------------------------------------------
+
+
+class RdpAccountant:
+    """Incremental RDP composition over heterogeneous (q, sigma) steps.
+
+    Backs the training service's persistent ledger (launch.service): each
+    ledger record is one `spend(q, sigma)`; `epsilon(delta)` converts the
+    running RDP vector, and `peek(q, sigma, delta)` prices a step WITHOUT
+    committing it — the budget gate refuses the step if the projection
+    exceeds the target. Replay cost is O(records) with a per-(q, sigma)
+    cache of the single-step RDP vector, so restart-time replay of a long
+    ledger costs one vector evaluation per distinct mechanism, not per
+    record.
+    """
+
+    def __init__(self, orders: Sequence[float] = DEFAULT_ORDERS):
+        if len(orders) == 0:
+            raise ValueError("order grid is empty")
+        self.orders = tuple(float(a) for a in orders)
+        self._rdp = np.zeros(len(self.orders))
+        self._steps = 0
+        self._cache: dict[tuple[float, float], np.ndarray] = {}
+
+    def _one_step(self, q: float, sigma: float) -> np.ndarray:
+        key = (float(q), float(sigma))
+        rdp = self._cache.get(key)
+        if rdp is None:
+            rdp = rdp_sampled_gaussian(q, sigma, 1, self.orders)
+            self._cache[key] = rdp
+        return rdp
+
+    @property
+    def steps(self) -> int:
+        return self._steps
+
+    def spend(self, q: float, sigma: float) -> None:
+        """Compose one sampled-Gaussian release into the running total."""
+        self._rdp = self._rdp + self._one_step(q, sigma)
+        self._steps += 1
+
+    def epsilon(self, delta: float) -> float:
+        """(eps, delta) spent so far."""
+        if self._steps == 0:
+            return 0.0
+        return rdp_to_eps(self._rdp, delta, self.orders)
+
+    def peek(self, q: float, sigma: float, delta: float) -> float:
+        """Projected epsilon if one more (q, sigma) step were spent."""
+        return rdp_to_eps(self._rdp + self._one_step(q, sigma), delta,
+                          self.orders)
+
+    def rdp(self) -> np.ndarray:
+        return self._rdp.copy()
+
+
+def replay_ledger(
+    records: Iterable[dict],
+    delta: float,
+    orders: Sequence[float] = DEFAULT_ORDERS,
+) -> tuple[RdpAccountant, float]:
+    """Replay ledger records (dicts with 'q' and 'sigma') into an accountant.
+
+    Returns (accountant, epsilon). The service uses this on startup to
+    rebuild the spent budget from the on-disk ledger before admitting any
+    new step.
+    """
+    acct = RdpAccountant(orders)
+    for rec in records:
+        acct.spend(float(rec["q"]), float(rec["sigma"]))
+    return acct, acct.epsilon(delta)

@@ -22,7 +22,7 @@ from repro.core import accounting, noise as noise_lib
 from repro.core.clipping import LossFn, base_mode, dp_clipped_gradients
 from repro.kernels import backend as ghost_backend
 from repro.core.quantile import QuantileState, clip_counts, init_quantile_state, update_thresholds
-from repro.core.spec import GroupLayout, P, SpecTree, _walk
+from repro.core.spec import GroupLayout, P, SpecTree, _walk, stable_hash
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,7 +190,7 @@ def add_noise_to_grads(
             piece = jax.lax.dynamic_slice_in_dim(stds, grp.offset, grp.count)
             piece = piece.reshape(grp.stack_shape or ())
             leaf_key = jax.random.fold_in(
-                key, hash("/".join(path)) & 0x7FFFFFFF)
+                key, stable_hash("/".join(path)))
             z = jax.random.normal(leaf_key, g.shape, dtype)
             if node.blocks > 1:
                 # std varies per column block of the last axis

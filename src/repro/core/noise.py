@@ -31,6 +31,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core.spec import stable_hash
+
 Strategy = str  # 'global' | 'equal_budget' | 'weighted'
 _STRATEGIES = ("global", "equal_budget", "weighted")
 
@@ -84,7 +86,7 @@ def _leaf_key(base_key: jax.Array, path: tuple) -> jax.Array:
             name = getattr(entry, "idx", None)
         if name is None:
             name = getattr(entry, "name", str(entry))
-        h = (h * 1000003 + hash(str(name))) & 0x7FFFFFFF
+        h = (h * 1000003 + stable_hash(str(name))) & 0x7FFFFFFF
     return jax.random.fold_in(base_key, h)
 
 

@@ -20,6 +20,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class QuantileState(NamedTuple):
@@ -46,6 +47,31 @@ def init_quantile_state(
         target_quantile=jnp.float32(target_quantile),
         lr=jnp.float32(lr),
         sigma_b=jnp.float32(sigma_b),
+    )
+
+
+def export_state(state: QuantileState) -> dict:
+    """Plain-python snapshot of the tracker (msgpack/JSON-safe).
+
+    The authoritative copy of the thresholds lives in the checkpointed
+    DPState pytree; this export rides in the checkpoint manifest's `meta`
+    so ops tooling (and the training service's resume validation) can read
+    thresholds without deserializing the full tree."""
+    return {
+        "thresholds": [float(t) for t in np.asarray(state.thresholds)],
+        "target_quantile": float(state.target_quantile),
+        "lr": float(state.lr),
+        "sigma_b": float(state.sigma_b),
+    }
+
+
+def restore_state(snapshot: dict) -> QuantileState:
+    """Inverse of `export_state` (float32 round-trip is exact)."""
+    return QuantileState(
+        thresholds=jnp.asarray(snapshot["thresholds"], jnp.float32),
+        target_quantile=jnp.float32(snapshot["target_quantile"]),
+        lr=jnp.float32(snapshot["lr"]),
+        sigma_b=jnp.float32(snapshot["sigma_b"]),
     )
 
 

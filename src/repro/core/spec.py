@@ -23,11 +23,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import zlib
 from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def stable_hash(name: str) -> int:
+    """Process-independent 31-bit string hash.
+
+    Python's builtin hash() is randomized per process (PYTHONHASHSEED), so
+    folding it into PRNG keys makes param init and noise draws differ
+    between processes — fatal for the training service's crash/resume
+    bitwise-parity guarantee. Everything that derives a key from a name
+    must use this instead."""
+    return zlib.crc32(name.encode()) & 0x7FFFFFFF
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +93,8 @@ def init_params(spec: SpecTree, key: jax.Array) -> Any:
             return _init_leaf(node, key)
         out = {}
         for name in sorted(node):
-            out[name] = build(node[name], jax.random.fold_in(key, hash(name) & 0x7FFFFFFF),
+            out[name] = build(node[name],
+                              jax.random.fold_in(key, stable_hash(name)),
                               path + (name,))
         return out
 

@@ -18,6 +18,7 @@ Sources (offline container => synthetic + byte-level):
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import numpy as np
 
@@ -151,6 +152,7 @@ class PoissonSampler:
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
         self.overflow_count = 0
+        self.draws = 0  # batches drawn so far (position in the stream)
 
     def next_indices(self) -> np.ndarray:
         mask = self._rng.random(self.num_examples) < self.rate
@@ -159,7 +161,39 @@ class PoissonSampler:
         if len(idx) > self.max_batch:
             self.overflow_count += 1
             idx = idx[: self.max_batch]
+        self.draws += 1
         return idx.astype(np.int64)
 
     def expected_batch(self) -> float:
         return self.num_examples * self.rate
+
+    def state(self) -> dict:
+        """Serializable snapshot: resuming from it continues the EXACT
+        subsample stream (amplification accounting assumes the stream is
+        drawn once — silently restarting it on resume is wrong). The RNG
+        bit-generator state is JSON-encoded because its 128-bit PCG64
+        integers overflow msgpack's int64."""
+        return {
+            "rng": json.dumps(self._rng.bit_generator.state),
+            "draws": self.draws,
+            "overflow_count": self.overflow_count,
+            "num_examples": self.num_examples,
+            "rate": self.rate,
+            "max_batch": self.max_batch,
+        }
+
+    def restore(self, state: dict) -> None:
+        """Inverse of `state()`. Refuses a snapshot from a sampler over a
+        different corpus/rate — that would silently change q mid-ledger."""
+        for field in ("num_examples", "max_batch"):
+            if int(state[field]) != getattr(self, field):
+                raise ValueError(
+                    f"sampler state mismatch: {field} was {state[field]}, "
+                    f"this sampler has {getattr(self, field)}")
+        if abs(float(state["rate"]) - self.rate) > 1e-12:
+            raise ValueError(
+                f"sampler state mismatch: rate was {state['rate']}, "
+                f"this sampler has {self.rate}")
+        self._rng.bit_generator.state = json.loads(state["rng"])
+        self.draws = int(state["draws"])
+        self.overflow_count = int(state["overflow_count"])

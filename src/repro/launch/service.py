@@ -1,0 +1,512 @@
+"""Crash-safe online DP training service.
+
+`launch.train` is a fixed-steps batch CLI; production DP training is a
+long-running *service*, and a service that loses its privacy-accountant
+state on a crash either over-spends epsilon (a privacy violation) or
+over-refuses (wasted compute). This daemon wraps `make_dp_train_step` with
+the durability layer that makes neither possible:
+
+  * **Persistent privacy ledger** — an append-only, per-line-checksummed
+    JSONL of (step, q, sigma, orders-crc) records. The record for step i is
+    appended and **fsynced before** step i's gradient update runs (the
+    ledger-before-commit invariant), so a crash at ANY point leaves a
+    ledger that covers every release that might have happened — the ledger
+    can over-count by the in-flight step, never under-count. On startup the
+    ledger replays through `core.accounting.RdpAccountant` (O(distinct
+    mechanisms), not O(records × steps)).
+  * **Hard epsilon enforcement** — before a step is admitted, its projected
+    epsilon (`RdpAccountant.peek`) is checked against the budget; a step
+    that would exceed it is *refused* and the service shuts down cleanly
+    with `BudgetExhausted` (final checkpoint written, status printed) — not
+    a crash, and not a silent over-spend.
+  * **Crash-safe checkpoints** — atomic write-stage/fsync/rename
+    (checkpoint.store) carrying params, optimizer state, quantile-threshold
+    state, and the `PoissonSampler` RNG state, so a `kill -9` resumes
+    bitwise-identically: same sample stream, same noise (the per-step key
+    is derived by folding dp_state.step into a fixed seed), same
+    thresholds. Steps that were ledgered but not yet committed at the crash
+    are *re-executed deterministically* — they reproduce the identical
+    release the pre-crash process made, so they are accounted once, not
+    twice (their records are recognized and skipped at append time).
+  * **Fault injection** — `--fault-at POINT:STEP` kills the process
+    (`os._exit`) at a named point: `pre-ledger-append`,
+    `post-ledger-append` (before commit), `pre-ckpt-rename` (mid
+    checkpoint publish), `post-step-commit`. tests/faults.py drives the
+    matrix and asserts bitwise resume parity; `mode="raise"` runs the same
+    matrix in-process for tier-1.
+  * **Retry / graceful degradation** — transient I/O failures around batch
+    fetch, ledger append, and checkpoint save retry with capped exponential
+    backoff; a torn/corrupt newest checkpoint falls back to the last step
+    that verifies (checkpoint.store.load_latest_checkpoint).
+
+Layout under --service-dir:  ledger.jsonl  +  ckpt/step_<N>/...
+
+Example:
+  PYTHONPATH=src python -m repro.launch.service --service-dir /tmp/svc \\
+      --arch tiny --steps 40 --batch 8 --seq 32 --budget-eps 4
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+import zlib
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import (
+    load_latest_checkpoint, save_checkpoint)
+from repro.core import accounting
+from repro.core.quantile import export_state as export_quantile_state
+from repro.core.spec import init_params
+from repro.data import PoissonSampler, make_lm_batch
+from repro.launch.train import build_arg_parser, build_everything, jit_step
+
+# exit code of a deterministically injected fault (distinguishable from a
+# real crash in ci.sh); budget exhaustion is a CLEAN exit (0).
+EXIT_FAULT = 86
+
+FAULT_POINTS = ("pre-ledger-append", "post-ledger-append",
+                "pre-ckpt-rename", "post-step-commit")
+
+_ORDERS_CRC = zlib.crc32(json.dumps(
+    list(accounting.DEFAULT_ORDERS)).encode())
+
+
+class BudgetExhausted(Exception):
+    """The next step's projected epsilon exceeds the budget — clean stop."""
+
+
+class LedgerCorrupt(ValueError):
+    """The ledger cannot be trusted (non-trailing corruption, step gaps,
+    or a mechanism/orders mismatch) — refuse to train on top of it."""
+
+
+class SimulatedCrash(RuntimeError):
+    """In-process stand-in for `kill -9` (FaultInjector mode='raise')."""
+
+
+# ---------------------------------------------------------------------------
+# Fault injection.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministically dies at (point, step).
+
+    mode="exit": `os._exit(EXIT_FAULT)` — no atexit handlers, no buffered
+    flushes, the closest userspace gets to `kill -9` (ci.sh uses this via
+    --fault-at). mode="raise": raises SimulatedCrash for the in-process
+    tier-1 matrix; the service loop does NOT catch it, so on-disk state is
+    exactly what the kill would have left.
+    """
+
+    point: str | None = None
+    step: int = -1
+    mode: str = "exit"
+
+    def __post_init__(self):
+        if self.point is not None and self.point not in FAULT_POINTS:
+            raise ValueError(
+                f"unknown fault point {self.point!r}; one of {FAULT_POINTS}")
+
+    @classmethod
+    def parse(cls, spec: str | None, mode: str = "exit") -> "FaultInjector":
+        """'POINT:STEP' -> injector (None -> never fires)."""
+        if not spec:
+            return cls()
+        point, _, step = spec.rpartition(":")
+        return cls(point=point, step=int(step), mode=mode)
+
+    def fire(self, point: str, step: int) -> None:
+        if self.point != point or step != self.step:
+            return
+        if self.mode == "exit":
+            sys.stderr.write(f"# FAULT {point}@{step}\n")
+            sys.stderr.flush()
+            os._exit(EXIT_FAULT)
+        raise SimulatedCrash(f"{point}@{step}")
+
+
+# ---------------------------------------------------------------------------
+# Retry / backoff.
+# ---------------------------------------------------------------------------
+
+
+def with_retries(fn: Callable, *, retries: int = 4, base_delay: float = 0.05,
+                 max_delay: float = 2.0, exceptions=(OSError,),
+                 sleep: Callable[[float], None] = time.sleep,
+                 describe: str = "io"):
+    """Run fn(); on a transient failure retry with capped exponential
+    backoff (base_delay * 2^attempt, capped at max_delay). The last error
+    propagates once `retries` re-attempts are spent."""
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except exceptions as e:
+            if attempt == retries:
+                raise
+            delay = min(max_delay, base_delay * (2.0 ** attempt))
+            sys.stderr.write(
+                f"# retry {describe}: attempt {attempt + 1}/{retries} "
+                f"failed ({e!r}); backing off {delay:.2f}s\n")
+            sleep(delay)
+
+
+# ---------------------------------------------------------------------------
+# The persistent privacy ledger.
+# ---------------------------------------------------------------------------
+
+
+class PrivacyLedger:
+    """Append-only checksummed JSONL of per-step privacy spends.
+
+    Line format: ``<compact-json> <crc32-of-json-hex>\\n``. `replay()`
+    verifies every line; a torn *trailing* line (the append that a crash
+    interrupted) is discarded and truncated away — safe, because the
+    ledger-before-commit invariant means the step it described never ran.
+    Corruption anywhere else raises LedgerCorrupt: an untrustworthy ledger
+    must refuse service, not guess.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fh = None
+
+    def replay(self) -> list[dict]:
+        if not os.path.exists(self.path):
+            return []
+        with open(self.path, "rb") as f:
+            blob = f.read()
+        records, offset = [], 0
+        for raw in blob.split(b"\n"):
+            if not raw:
+                offset += 1  # the newline itself
+                continue
+            rec = self._parse_line(raw)
+            if rec is None:
+                if offset + len(raw) >= len(blob):  # torn trailing line
+                    with open(self.path, "r+b") as f:
+                        f.truncate(offset)
+                        f.flush()
+                        os.fsync(f.fileno())
+                    break
+                raise LedgerCorrupt(
+                    f"{self.path}: corrupt record at byte {offset} (not the "
+                    f"trailing line — the ledger cannot be trusted)")
+            records.append(rec)
+            offset += len(raw) + 1
+        for i, rec in enumerate(records):
+            if rec.get("step") != i:
+                raise LedgerCorrupt(
+                    f"{self.path}: record {i} is for step {rec.get('step')} "
+                    f"— ledger steps must be 0..n-1 with no gaps")
+            if rec.get("orders_crc") != _ORDERS_CRC:
+                raise LedgerCorrupt(
+                    f"{self.path}: record {i} was accounted on a different "
+                    f"RDP order grid")
+        return records
+
+    @staticmethod
+    def _parse_line(raw: bytes) -> dict | None:
+        payload, sep, crc = raw.rpartition(b" ")
+        if not sep:
+            return None
+        try:
+            if int(crc, 16) != zlib.crc32(payload):
+                return None
+            rec = json.loads(payload)
+        except ValueError:
+            return None
+        return rec if isinstance(rec, dict) else None
+
+    def append(self, record: dict) -> None:
+        """Durably append one record: write + flush + fsync before
+        returning — the caller only commits the step after this returns."""
+        payload = json.dumps(record, sort_keys=True,
+                             separators=(",", ":")).encode()
+        line = payload + b" " + f"{zlib.crc32(payload):08x}".encode() + b"\n"
+        if self._fh is None:
+            self._fh = open(self.path, "ab")
+        self._fh.write(line)
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# ---------------------------------------------------------------------------
+# The service.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServiceRuntime:
+    """Everything deterministic and reusable across service incarnations
+    (model, packed corpus, the jitted step). tests share one runtime across
+    crash/resume cycles so the in-process fault matrix pays one compile."""
+
+    cfg: object
+    model: object
+    rows: np.ndarray
+    init_fn: Callable
+    step: Callable  # jitted
+    plan: object
+    batch: int
+    seed: int
+
+    def make_sampler(self) -> PoissonSampler:
+        return PoissonSampler(num_examples=self.rows.shape[0],
+                              rate=self.batch / self.rows.shape[0],
+                              max_batch=self.batch, seed=1)
+
+
+def build_runtime(args) -> ServiceRuntime:
+    # sigma is calibrated for the --calib-steps horizon (default --steps);
+    # running past it is exactly what the budget gate is for
+    build_args = argparse.Namespace(**vars(args))
+    build_args.steps = getattr(args, "calib_steps", None) or args.steps
+    (cfg, model, rows, _sampler, init_fn, step_fn, plan,
+     mesh) = build_everything(build_args)
+    return ServiceRuntime(cfg=cfg, model=model, rows=rows, init_fn=init_fn,
+                          step=jit_step(step_fn, model, mesh), plan=plan,
+                          batch=args.batch, seed=args.seed)
+
+
+class TrainService:
+    """One incarnation of the daemon over a --service-dir.
+
+    Construction loads ledger + newest verified checkpoint (or initializes
+    fresh state); `run()` trains until `target_steps` are committed or the
+    budget is exhausted (raising BudgetExhausted after a final checkpoint).
+    """
+
+    def __init__(self, args, *, runtime: ServiceRuntime | None = None,
+                 fault: FaultInjector | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.args = args
+        self.fault = fault or FaultInjector.parse(
+            getattr(args, "fault_at", None))
+        self.sleep = sleep
+        self.runtime = runtime or build_runtime(args)
+        self.target_steps = args.steps
+        self.delta = args.delta
+        self.budget_eps = getattr(args, "budget_eps", None) or args.epsilon
+        if self.budget_eps is None:
+            raise ValueError("service needs a budget: --budget-eps (or "
+                             "--epsilon for sigma calibration)")
+        self.ckpt_every = max(1, getattr(args, "checkpoint_every", 10))
+
+        os.makedirs(args.service_dir, exist_ok=True)
+        self.ckpt_dir = os.path.join(args.service_dir, "ckpt")
+        self.ledger = PrivacyLedger(
+            os.path.join(args.service_dir, "ledger.jsonl"))
+
+        rt = self.runtime
+        plan = rt.plan
+        self.q = float(plan.config.sampling_rate)
+        self.sigma = float(plan.sigma)
+        self.sampler = rt.make_sampler()
+        self.key = jax.random.PRNGKey(rt.seed + 1)
+        self._restore()
+
+    # -- startup: ledger replay + checkpoint restore -----------------------
+
+    def _restore(self) -> None:
+        records = with_retries(self.ledger.replay, sleep=self.sleep,
+                               describe="ledger replay")
+        self.acct = accounting.RdpAccountant()
+        for rec in records:
+            if (abs(rec["q"] - self.q) > 1e-12
+                    or abs(rec["sigma"] - self.sigma) > 1e-9):
+                raise LedgerCorrupt(
+                    f"ledger step {rec['step']} was spent at "
+                    f"(q={rec['q']}, sigma={rec['sigma']}) but this service "
+                    f"is configured for (q={self.q}, sigma={self.sigma}) — "
+                    f"refusing to mix mechanisms in one ledger")
+            self.acct.spend(rec["q"], rec["sigma"])
+        self.ledgered_steps = len(records)
+
+        rt = self.runtime
+        params0 = init_params(rt.model.spec, jax.random.PRNGKey(rt.seed))
+        opt0, dp0 = rt.init_fn(params0)
+        template = {"params": params0, "opt_state": opt0, "dp_state": dp0}
+        found = with_retries(
+            lambda: load_latest_checkpoint(self.ckpt_dir, template),
+            sleep=self.sleep, describe="checkpoint load")
+        if found is None:
+            self.committed = 0
+            self.params, self.opt_state, self.dp_state = params0, opt0, dp0
+        else:
+            self.committed, tree, manifest = found
+            self.params = tree["params"]
+            self.opt_state = tree["opt_state"]
+            self.dp_state = tree["dp_state"]
+            meta = manifest.get("meta") or {}
+            if "sampler" in meta:
+                self.sampler.restore(meta["sampler"])
+            if self.sampler.draws != self.committed:
+                raise LedgerCorrupt(
+                    f"checkpoint step {self.committed} carries a sampler at "
+                    f"draw {self.sampler.draws} — sample stream and commit "
+                    f"log disagree")
+        # the privacy invariant: every committed step MUST be ledgered
+        # (the converse — ledgered but uncommitted — is the safe crash gap
+        # that deterministic re-execution closes)
+        if self.ledgered_steps < self.committed:
+            raise LedgerCorrupt(
+                f"ledger covers {self.ledgered_steps} steps but "
+                f"{self.committed} steps are committed — the ledger "
+                f"under-counts; refusing to continue")
+
+    # -- the step loop -----------------------------------------------------
+
+    def epsilon(self) -> float:
+        return self.acct.epsilon(self.delta)
+
+    def _fetch_batch(self) -> dict:
+        def fetch():
+            idx = self.sampler.next_indices()
+            return make_lm_batch(self.runtime.rows, idx, self.runtime.batch)
+        return with_retries(fetch, sleep=self.sleep, describe="batch fetch")
+
+    def _admit(self, step: int) -> None:
+        """The budget gate + the ledger-before-commit append for `step`."""
+        if step < self.ledgered_steps:
+            # Re-executing a step that was ledgered but not committed when
+            # the previous incarnation died. The resume is bitwise
+            # deterministic (same params, same sampler stream, same
+            # fold_in(key, step) noise), so this re-release is the SAME
+            # mechanism output the ledger already paid for — spending it
+            # again would double-count.
+            return
+        projected = self.acct.peek(self.q, self.sigma, self.delta)
+        if projected > self.budget_eps + 1e-9:
+            raise BudgetExhausted(
+                f"step {step} projects epsilon {projected:.4f} > budget "
+                f"{self.budget_eps} (delta={self.delta}); spent so far: "
+                f"{self.epsilon():.4f} over {self.acct.steps} steps")
+        self.fault.fire("pre-ledger-append", step)
+        record = {"step": step, "q": self.q, "sigma": self.sigma,
+                  "orders_crc": _ORDERS_CRC}
+        with_retries(lambda: self.ledger.append(record), sleep=self.sleep,
+                     describe="ledger append")
+        self.acct.spend(self.q, self.sigma)
+        self.ledgered_steps += 1
+        self.fault.fire("post-ledger-append", step)
+
+    def _checkpoint(self) -> str:
+        step = self.committed
+        meta = {
+            "sampler": self.sampler.state(),
+            "ledger_records": self.ledgered_steps,
+            "epsilon": self.epsilon(),
+            "quantile": export_quantile_state(self.dp_state.qstate),
+            "mechanism": {"q": self.q, "sigma": self.sigma,
+                          "delta": self.delta},
+        }
+        tree = {"params": self.params, "opt_state": self.opt_state,
+                "dp_state": self.dp_state}
+
+        def hook(stage):  # the mid-publish kill of the fault matrix
+            if stage == "pre-rename":
+                self.fault.fire("pre-ckpt-rename", step)
+
+        return with_retries(
+            lambda: save_checkpoint(self.ckpt_dir, step, tree, meta=meta,
+                                    fault_hook=hook),
+            sleep=self.sleep, describe="checkpoint save")
+
+    def run(self) -> dict:
+        """Train until target_steps are committed or the budget runs out.
+
+        Returns a status dict; raises BudgetExhausted (after writing a
+        final checkpoint) when the gate refuses the next step — callers
+        treat that as a CLEAN shutdown. SimulatedCrash/os._exit from the
+        fault injector propagate uncaught, by design.
+        """
+        log_every = max(1, getattr(self.args, "log_every", 10))
+        while self.committed < self.target_steps:
+            step = self.committed
+            try:
+                self._admit(step)
+            except BudgetExhausted:
+                self._checkpoint()  # make the refusal cheap to resume from
+                self.ledger.close()
+                raise
+            batch = self._fetch_batch()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, self.dp_state, met = \
+                self.runtime.step(self.params, self.opt_state, self.dp_state,
+                                  batch, self.key)
+            loss = float(met.loss)  # blocks: the update is now materialized
+            self.committed += 1
+            self.fault.fire("post-step-commit", step)
+            if step % log_every == 0 or self.committed == self.target_steps:
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"eps {self.epsilon():.4f}/{self.budget_eps} "
+                      f"thr {float(met.mean_threshold):.4f}", flush=True)
+            if (self.committed % self.ckpt_every == 0
+                    or self.committed == self.target_steps):
+                self._checkpoint()
+        self.ledger.close()
+        return {"status": "complete", "committed": self.committed,
+                "epsilon": self.epsilon(), "budget_eps": self.budget_eps}
+
+
+# ---------------------------------------------------------------------------
+# CLI.
+# ---------------------------------------------------------------------------
+
+
+def build_service_parser() -> argparse.ArgumentParser:
+    ap = build_arg_parser(
+        description="crash-safe online DP training service")
+    ap.add_argument("--service-dir", required=True,
+                    help="durable state root: ledger.jsonl + ckpt/")
+    ap.add_argument("--budget-eps", type=float, default=None,
+                    help="hard epsilon budget enforced by the admission "
+                         "gate (default: --epsilon)")
+    ap.add_argument("--calib-steps", type=int, default=None,
+                    help="horizon used to calibrate sigma from --epsilon "
+                         "(default: --steps); set it below --steps to "
+                         "drive the run into budget exhaustion")
+    ap.add_argument("--checkpoint-every", type=int, default=10)
+    ap.add_argument("--fault-at", default=None, metavar="POINT:STEP",
+                    help=f"die (os._exit {EXIT_FAULT}) at an injection "
+                         f"point; POINT one of {', '.join(FAULT_POINTS)}")
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_service_parser().parse_args(argv)
+    svc = TrainService(args)
+    print(f"# service dir={args.service_dir} arch={svc.runtime.cfg.name} "
+          f"mode={svc.runtime.plan.config.mode} q={svc.q:.5f} "
+          f"sigma={svc.sigma:.4f} budget_eps={svc.budget_eps} "
+          f"resume_at={svc.committed} ledgered={svc.ledgered_steps} "
+          f"eps_spent={svc.epsilon():.4f}", flush=True)
+    try:
+        status = svc.run()
+    except BudgetExhausted as e:
+        print(f"# service: status=budget_exhausted step={svc.committed} "
+              f"epsilon={svc.epsilon():.4f} budget={svc.budget_eps}")
+        print(f"# {e}")
+        return 0
+    print(f"# service: status={status['status']} step={status['committed']} "
+          f"epsilon={status['epsilon']:.4f} budget={status['budget_eps']}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -88,8 +88,10 @@ def build_everything(args):
     return cfg, model, rows, sampler, init_fn, step_fn, plan, mesh
 
 
-def main():
-    ap = argparse.ArgumentParser()
+def build_arg_parser(**kwargs) -> argparse.ArgumentParser:
+    """The training CLI surface, shared with the service daemon
+    (repro.launch.service extends this parser with ledger/fault flags)."""
+    ap = argparse.ArgumentParser(**kwargs)
     ap.add_argument("--arch", default="tiny",
                     choices=ARCH_IDS + ["tiny"])
     ap.add_argument("--reduced", action="store_true")
@@ -137,28 +139,61 @@ def main():
                          "off-TPU — slow, validation only), or auto "
                          "cost-model dispatch")
     ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest VERIFIED checkpoint in "
+                         "--checkpoint-dir (params, opt state, thresholds, "
+                         "and the Poisson sampler RNG state all restore, so "
+                         "the run continues the exact sample stream; torn "
+                         "checkpoints are skipped). For the full crash-safe "
+                         "service with a persistent privacy ledger use "
+                         "repro.launch.service.")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
 
-    (cfg, model, rows, sampler, init_fn, step_fn, plan,
-     mesh) = build_everything(args)
-    params = init_params(model.spec, jax.random.PRNGKey(args.seed))
-    opt_state, dp_state = init_fn(params)
-    # donate params/opt_state/dp_state: they update in place every step, so
-    # XLA aliases them input->output instead of double-buffering the model
+
+def jit_step(step_fn, model, mesh):
+    """jit the step with donated carry state (and model-sharded params
+    in/out when a mesh is given) — shared by train.py and the service."""
     if mesh is not None:
         # weights are STORED model-sharded between steps (memory: 1/M per
         # device); the shard_map entry all-gathers them — weight traffic,
         # classified separately from norm traffic by hlo_analysis
         from repro.launch.sharding import params_shardings
         pshard = params_shardings(model.spec, mesh)
-        step = jax.jit(step_fn,
+        return jax.jit(step_fn,
                        in_shardings=(pshard, None, None, None, None),
                        out_shardings=(pshard, None, None, None),
                        donate_argnums=(0, 1, 2))
-    else:
-        step = jax.jit(step_fn, donate_argnums=(0, 1, 2))
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+def main():
+    args = build_arg_parser().parse_args()
+
+    (cfg, model, rows, sampler, init_fn, step_fn, plan,
+     mesh) = build_everything(args)
+    params = init_params(model.spec, jax.random.PRNGKey(args.seed))
+    opt_state, dp_state = init_fn(params)
+    start_step = 0
+    if args.resume:
+        if not args.checkpoint_dir:
+            raise SystemExit("--resume requires --checkpoint-dir")
+        from repro.checkpoint import load_latest_checkpoint
+        found = load_latest_checkpoint(
+            args.checkpoint_dir,
+            {"params": params, "opt_state": opt_state, "dp_state": dp_state})
+        if found is not None:
+            start_step, tree, manifest = found
+            params, opt_state, dp_state = (
+                tree["params"], tree["opt_state"], tree["dp_state"])
+            meta = manifest.get("meta") or {}
+            if "sampler" in meta:
+                sampler.restore(meta["sampler"])
+            print(f"# resumed from step {start_step}")
+    # donate params/opt_state/dp_state: they update in place every step, so
+    # XLA aliases them input->output instead of double-buffering the model
+    step = jit_step(step_fn, model, mesh)
     key = jax.random.PRNGKey(args.seed + 1)
 
     print(f"# arch={cfg.name} params={model.num_params:,} "
@@ -168,28 +203,32 @@ def main():
           f"sigma={plan.sigma:.3f} sigma_new={plan.sigma_new:.3f} "
           f"sigma_b={plan.sigma_b:.3f}")
     t_start = time.time()
-    for i in range(args.steps):
+    ran = 0
+    for i in range(start_step, args.steps):
         idx = sampler.next_indices()
         batch = make_lm_batch(rows, idx, args.batch)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         params, opt_state, dp_state, met = step(
             params, opt_state, dp_state, batch, key)
+        ran += 1
         if i % args.log_every == 0 or i == args.steps - 1:
             print(f"step {i:5d} loss {float(met.loss):.4f} "
                   f"clip_frac {float(met.clip_fraction):.3f} "
                   f"thr {float(met.mean_threshold):.4f} "
                   f"gnorm {float(met.grad_norm):.4f}", flush=True)
     wall = time.time() - t_start
-    if plan.config.private:
+    if plan.config.private and ran:
         eps = compute_epsilon(sigma=plan.sigma,
                               sampling_rate=plan.config.sampling_rate,
                               steps=args.steps, delta=args.delta)
         print(f"# spent epsilon={eps:.3f} (delta={args.delta}) "
               f"in {args.steps} steps, {wall:.1f}s "
-              f"({wall/args.steps*1e3:.1f} ms/step)")
+              f"({wall/ran*1e3:.1f} ms/step)")
     if args.checkpoint_dir:
-        path = save_checkpoint(args.checkpoint_dir, args.steps,
-                               {"params": params, "dp_state": dp_state})
+        path = save_checkpoint(
+            args.checkpoint_dir, args.steps,
+            {"params": params, "opt_state": opt_state, "dp_state": dp_state},
+            meta={"sampler": sampler.state()})
         print(f"# checkpoint: {path}")
     return 0
 

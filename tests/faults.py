@@ -1,0 +1,135 @@
+"""Fault-injection harness for the crash-safe DP training service.
+
+Drives `repro.launch.service.TrainService` through deterministic crashes at
+each named injection point and exposes the comparisons the acceptance
+criteria need:
+
+  * run a reference (uninterrupted) service to completion,
+  * run a faulted service that dies at (point, step) via SimulatedCrash —
+    the in-process stand-in for `kill -9`; nothing is cleaned up, the
+    on-disk state is exactly what the kill would have left,
+  * resume it to completion,
+  * digest the durable state (final checkpoint leaf bytes + ledger bytes)
+    for bitwise comparison.
+
+tests/test_service.py runs the matrix in tier-1; scripts/ci.sh runs the
+same points as real `os._exit` kills through the service CLI (--fault-at).
+A single jitted runtime is shared across all runs (the model, corpus, and
+compiled step are deterministic and state-free), so the matrix pays one
+compile.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+
+import jax
+import numpy as np
+
+from repro.checkpoint.store import (
+    latest_verified_step, load_latest_checkpoint, load_manifest)
+from repro.core.spec import init_params
+from repro.launch import service as svc_mod
+from repro.launch.service import (
+    FaultInjector, PrivacyLedger, ServiceRuntime, SimulatedCrash,
+    TrainService, build_service_parser)
+
+TINY_ARGV = [
+    "--arch", "tiny", "--steps", "8", "--batch", "8", "--seq", "32",
+    "--docs", "64", "--sigma", "0.8", "--checkpoint-every", "3",
+    "--log-every", "100",
+]
+
+
+def make_args(service_dir: str, **overrides):
+    """Service args over tiny defaults; overrides are flag names with
+    underscores (steps=12, budget_eps=3.5, ...)."""
+    argv = ["--service-dir", service_dir] + list(TINY_ARGV)
+    for k, v in overrides.items():
+        argv += [f"--{k.replace('_', '-')}", str(v)]
+    return build_service_parser().parse_args(argv)
+
+
+def shared_runtime(args) -> ServiceRuntime:
+    return svc_mod.build_runtime(args)
+
+
+def run_service(args, runtime, *, fault: FaultInjector | None = None):
+    """One service incarnation. Returns ("complete", status) or
+    ("crashed", point@step) or ("budget_exhausted", msg)."""
+    svc = TrainService(args, runtime=runtime, fault=fault, sleep=lambda _: None)
+    try:
+        status = svc.run()
+    except SimulatedCrash as e:
+        return "crashed", str(e)
+    except svc_mod.BudgetExhausted as e:
+        return "budget_exhausted", str(e)
+    return "complete", status
+
+
+def run_with_crash_and_resume(args, runtime, point: str, step: int):
+    """Crash at (point, step), then resume to completion. Returns the crash
+    tag so callers can assert the fault actually fired."""
+    outcome, tag = run_service(
+        args, runtime, fault=FaultInjector(point=point, step=step,
+                                           mode="raise"))
+    assert outcome == "crashed", f"fault {point}@{step} never fired: {outcome}"
+    outcome2, status = run_service(args, runtime)
+    assert outcome2 == "complete", f"resume failed: {status}"
+    return tag, status
+
+
+def state_digest(service_dir: str) -> dict:
+    """Bitwise fingerprint of the durable state: every leaf of the newest
+    verified checkpoint, the sampler snapshot, and the raw ledger bytes."""
+    ckpt_dir = os.path.join(service_dir, "ckpt")
+    step = latest_verified_step(ckpt_dir)
+    assert step is not None, f"no verified checkpoint under {ckpt_dir}"
+    manifest = load_manifest(ckpt_dir, step)
+    h = hashlib.sha256()
+    codec = manifest["codec"]
+    suffix = {"zstd": ".bin.zst", "zlib": ".bin.zz"}[codec]
+    for i in range(manifest["num_shards"]):
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}",
+                               f"shard_{i:04d}{suffix}"), "rb") as f:
+            h.update(f.read())
+    with open(os.path.join(service_dir, "ledger.jsonl"), "rb") as f:
+        ledger_bytes = f.read()
+    return {
+        "step": step,
+        "shards_sha": h.hexdigest(),
+        "sampler": manifest["meta"]["sampler"],
+        "epsilon": manifest["meta"]["epsilon"],
+        "ledger_sha": hashlib.sha256(ledger_bytes).hexdigest(),
+        "ledger_records": len([l for l in ledger_bytes.splitlines() if l]),
+    }
+
+
+def load_final_tree(args, runtime, service_dir: str):
+    """The newest verified checkpoint's pytree (for leaf-level diffs)."""
+    params0 = init_params(runtime.model.spec, jax.random.PRNGKey(runtime.seed))
+    opt0, dp0 = runtime.init_fn(params0)
+    found = load_latest_checkpoint(
+        os.path.join(service_dir, "ckpt"),
+        {"params": params0, "opt_state": opt0, "dp_state": dp0})
+    assert found is not None
+    return found
+
+
+def assert_trees_bitwise_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        xa, ya = np.asarray(x), np.asarray(y)
+        assert xa.dtype == ya.dtype and xa.shape == ya.shape
+        assert xa.tobytes() == ya.tobytes(), "leaf differs bitwise"
+
+
+def ledger_records(service_dir: str) -> list[dict]:
+    return PrivacyLedger(os.path.join(service_dir, "ledger.jsonl")).replay()
+
+
+def committed_steps(service_dir: str) -> int:
+    step = latest_verified_step(os.path.join(service_dir, "ckpt"))
+    return 0 if step is None else step

@@ -74,3 +74,117 @@ def test_remark_3_1_roundtrip(sigma, k, r):
 def test_budget_exhaustion_raises():
     with pytest.raises(ValueError):
         acc.split_noise_multiplier(sigma=1.0, sigma_b=0.5, num_groups=10)
+
+
+# ---------------------------------------------------------------------------
+# Edge-case guards: explicit ValueErrors, not math-domain errors.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad_q", [-0.1, 1.0001, 2.0])
+def test_rdp_rejects_bad_sampling_rate(bad_q):
+    with pytest.raises(ValueError):
+        acc.rdp_sampled_gaussian(bad_q, 1.0, 10)
+
+
+@pytest.mark.parametrize("bad_sigma", [0.0, -1.0, math.inf, math.nan])
+def test_rdp_rejects_bad_sigma(bad_sigma):
+    with pytest.raises(ValueError):
+        acc.rdp_sampled_gaussian(0.01, bad_sigma, 10)
+
+
+def test_rdp_rejects_empty_or_invalid_order_grid():
+    with pytest.raises(ValueError):
+        acc.rdp_sampled_gaussian(0.01, 1.0, 10, orders=[])
+    with pytest.raises(ValueError):
+        acc.rdp_sampled_gaussian(0.01, 1.0, 10, orders=[0.5, 2.0])
+    with pytest.raises(ValueError):
+        acc.rdp_to_eps(np.zeros(0), 1e-5, orders=[])
+
+
+def test_rdp_to_eps_rejects_bad_delta_and_shape_mismatch():
+    rdp = acc.rdp_sampled_gaussian(0.01, 1.0, 10)
+    for bad_delta in (0.0, 1.0, -1e-5, 2.0):
+        with pytest.raises(ValueError):
+            acc.rdp_to_eps(rdp, bad_delta)
+    with pytest.raises(ValueError):
+        acc.rdp_to_eps(rdp[:-1], 1e-5)
+
+
+def test_calibrate_sigma_rejects_degenerate_inputs():
+    # q=0 spends nothing (any sigma "works"); q>1 is not a probability;
+    # both previously fell into cryptic log-domain failures
+    for bad_q in (0.0, -0.01, 1.5):
+        with pytest.raises(ValueError):
+            acc.calibrate_sigma(target_eps=3.0, sampling_rate=bad_q,
+                                steps=100, delta=1e-5)
+    with pytest.raises(ValueError):
+        acc.calibrate_sigma(target_eps=3.0, sampling_rate=0.01, steps=0,
+                            delta=1e-5)
+    with pytest.raises(ValueError):
+        acc.calibrate_sigma(target_eps=3.0, sampling_rate=0.01, steps=100,
+                            delta=0.0)
+
+
+def test_q_edge_values_still_account():
+    # the legal boundary values stay meaningful: q=0 spends nothing,
+    # q=1 is plain (unsubsampled) Gaussian composition
+    assert np.all(acc.rdp_sampled_gaussian(0.0, 1.0, 100) == 0)
+    eps = acc.compute_epsilon(sigma=5.0, sampling_rate=1.0, steps=10,
+                              delta=1e-6)
+    assert eps > 0 and math.isfinite(eps)
+
+
+# ---------------------------------------------------------------------------
+# Incremental accountant (the service's ledger-replay API).
+# ---------------------------------------------------------------------------
+
+
+def test_accountant_matches_batch_composition():
+    a = acc.RdpAccountant()
+    for _ in range(25):
+        a.spend(0.02, 1.1)
+    batch = acc.compute_epsilon(sigma=1.1, sampling_rate=0.02, steps=25,
+                                delta=1e-5)
+    assert abs(a.epsilon(1e-5) - batch) < 1e-12
+    assert a.steps == 25
+
+
+def test_accountant_peek_prices_without_committing():
+    a = acc.RdpAccountant()
+    for _ in range(10):
+        a.spend(0.01, 1.0)
+    before = a.epsilon(1e-5)
+    projected = a.peek(0.01, 1.0, 1e-5)
+    assert a.epsilon(1e-5) == before  # peek did not commit
+    a.spend(0.01, 1.0)
+    assert abs(a.epsilon(1e-5) - projected) < 1e-12
+    assert projected > before
+
+
+def test_accountant_heterogeneous_mechanisms_compose():
+    # RDP composes additively across different (q, sigma) — order must not
+    # matter
+    a1, a2 = acc.RdpAccountant(), acc.RdpAccountant()
+    spends = [(0.01, 1.0)] * 5 + [(0.05, 2.0)] * 5
+    for q, s in spends:
+        a1.spend(q, s)
+    for q, s in reversed(spends):
+        a2.spend(q, s)
+    assert abs(a1.epsilon(1e-5) - a2.epsilon(1e-5)) < 1e-12
+    np.testing.assert_allclose(a1.rdp(), a2.rdp(), rtol=1e-12, atol=1e-12)
+
+
+def test_replay_ledger_matches_manual_spends():
+    recs = [{"step": i, "q": 0.01, "sigma": 0.9} for i in range(7)]
+    acct, eps = acc.replay_ledger(recs, 1e-5)
+    assert acct.steps == 7
+    assert abs(eps - acc.compute_epsilon(sigma=0.9, sampling_rate=0.01,
+                                         steps=7, delta=1e-5)) < 1e-12
+
+
+def test_fresh_accountant_spends_nothing():
+    a = acc.RdpAccountant()
+    assert a.epsilon(1e-5) == 0.0
+    with pytest.raises(ValueError):
+        acc.RdpAccountant(orders=[])

@@ -82,3 +82,22 @@ def test_multi_group_independent():
     s2 = update_thresholds(state, counts, 8, jax.random.PRNGKey(0))
     assert float(s2.thresholds[0]) < 1.0
     assert float(s2.thresholds[1]) > 1.0
+
+
+def test_export_restore_state_roundtrip():
+    """The manifest-meta snapshot round-trips the tracker exactly (float32
+    values survive the python-float detour bit-for-bit)."""
+    import msgpack
+
+    from repro.core.quantile import export_state, restore_state
+
+    state = init_quantile_state(np.array([0.25, 1.7, 3.3], np.float32),
+                                target_quantile=0.55, lr=0.3, sigma_b=12.5)
+    counts = clip_counts(jnp.full((3, 16), 0.04), state.thresholds)
+    state = update_thresholds(state, counts, 16, jax.random.PRNGKey(7))
+    snap = export_state(state)
+    msgpack.packb(snap)  # must be manifest-meta safe
+    back = restore_state(snap)
+    for a, b in zip(state, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert np.asarray(a).dtype == np.asarray(b).dtype

@@ -1,0 +1,257 @@
+"""The crash-safe training service: fault matrix, ledger semantics, budget
+enforcement, retry/backoff. The kill -9 (os._exit) variant of the same
+matrix runs in scripts/ci.sh through the service CLI; here the crashes are
+in-process (FaultInjector mode="raise") so tier-1 pays one compile."""
+import json
+import os
+import zlib
+
+import numpy as np
+import pytest
+
+import faults
+from repro.core import accounting
+from repro.launch import service as svc_mod
+from repro.launch.service import (
+    BudgetExhausted, FaultInjector, LedgerCorrupt, PrivacyLedger,
+    SimulatedCrash, with_retries)
+
+
+@pytest.fixture(scope="module")
+def runtime(tmp_path_factory):
+    args = faults.make_args(str(tmp_path_factory.mktemp("rt")))
+    return faults.shared_runtime(args)
+
+
+@pytest.fixture(scope="module")
+def reference(runtime, tmp_path_factory):
+    """Uninterrupted 8-step run: the oracle every faulted run must match."""
+    d = str(tmp_path_factory.mktemp("ref"))
+    outcome, status = faults.run_service(faults.make_args(d), runtime)
+    assert outcome == "complete" and status["committed"] == 8
+    return d
+
+
+# ---------------------------------------------------------------------------
+# The fault matrix: kill at each injection point, resume, demand bitwise
+# equality with the uninterrupted run.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("point,step", [
+    ("pre-ledger-append", 4),    # before the step's spend is durable
+    ("post-ledger-append", 4),   # spend durable, update NOT committed
+    ("post-ledger-append", 5),   # ditto, off the checkpoint boundary
+    ("post-step-commit", 4),     # update done, checkpoint may lag
+    ("pre-ckpt-rename", 6),      # mid checkpoint publish (staged, unrenamed)
+])
+def test_fault_matrix_bitwise_resume(runtime, reference, tmp_path, point,
+                                     step):
+    d = str(tmp_path)
+    args = faults.make_args(d)
+    tag, _ = faults.run_with_crash_and_resume(args, runtime, point, step)
+    assert tag == f"{point}@{step}"
+    # durable state identical to the run that never crashed: params, opt
+    # state, thresholds, sampler stream (manifest meta), ledger bytes
+    assert faults.state_digest(d) == faults.state_digest(reference)
+    _, tree_f, _ = faults.load_final_tree(args, runtime, d)
+    _, tree_r, _ = faults.load_final_tree(args, runtime, reference)
+    faults.assert_trees_bitwise_equal(tree_f, tree_r)
+
+
+def test_ledger_never_undercounts_at_crash(runtime, tmp_path):
+    """At the instant of ANY crash, ledger records >= committed steps: the
+    ledger may over-count by the in-flight step, never under-count."""
+    for point, step in [("pre-ledger-append", 4), ("post-ledger-append", 4),
+                        ("post-step-commit", 4), ("pre-ckpt-rename", 6)]:
+        d = str(tmp_path / f"{point}-{step}")
+        outcome, _ = faults.run_service(
+            faults.make_args(d), runtime,
+            fault=FaultInjector(point=point, step=step, mode="raise"))
+        assert outcome == "crashed"
+        records = faults.ledger_records(d)
+        committed = faults.committed_steps(d)
+        assert len(records) >= committed
+        # post-append pre-commit is the over-count gap the resume closes
+        if point == "post-ledger-append":
+            assert len(records) == step + 1 and committed < step + 1
+
+
+def test_replayed_epsilon_is_monotone(reference):
+    recs = faults.ledger_records(reference)
+    assert [r["step"] for r in recs] == list(range(8))
+    acct = accounting.RdpAccountant()
+    eps_seq = []
+    for r in recs:
+        acct.spend(r["q"], r["sigma"])
+        eps_seq.append(acct.epsilon(1e-5))
+    assert all(b >= a for a, b in zip(eps_seq, eps_seq[1:]))
+    assert eps_seq[0] > 0
+
+
+def test_budget_exhaustion_refuses_cleanly(runtime, tmp_path):
+    """A budget between the 5- and 6-step spend stops the run at exactly 5
+    committed steps, with a checkpoint written and the refusal durable
+    across a restart (no over-spend, no crash)."""
+    acct = accounting.RdpAccountant()
+    q, sigma = runtime.plan.config.sampling_rate, runtime.plan.sigma
+    eps_at = []
+    for _ in range(6):
+        acct.spend(q, sigma)
+        eps_at.append(acct.epsilon(1e-5))
+    budget = (eps_at[4] + eps_at[5]) / 2.0
+    d = str(tmp_path)
+    args = faults.make_args(d, budget_eps=budget)
+    outcome, msg = faults.run_service(args, runtime)
+    assert outcome == "budget_exhausted", msg
+    assert faults.committed_steps(d) == 5
+    records = faults.ledger_records(d)
+    assert len(records) == 5  # the refused 6th step was never ledgered
+    _, eps_spent = accounting.replay_ledger(records, 1e-5)
+    assert eps_spent <= budget
+    # enforcement survives the restart: resume refuses immediately
+    outcome2, _ = faults.run_service(args, runtime)
+    assert outcome2 == "budget_exhausted"
+    assert faults.committed_steps(d) == 5
+
+
+def test_resume_after_budget_raise_with_higher_budget(runtime, tmp_path):
+    """Raising the budget lets the same ledger continue spending."""
+    d = str(tmp_path)
+    acct = accounting.RdpAccountant()
+    q, sigma = runtime.plan.config.sampling_rate, runtime.plan.sigma
+    for _ in range(4):
+        acct.spend(q, sigma)
+    budget = acct.epsilon(1e-5) + 1e-6
+    outcome, _ = faults.run_service(
+        faults.make_args(d, budget_eps=budget), runtime)
+    assert outcome == "budget_exhausted"
+    committed_before = faults.committed_steps(d)
+    outcome2, status = faults.run_service(
+        faults.make_args(d, budget_eps=8.0), runtime)
+    assert outcome2 == "complete" and status["committed"] == 8
+    assert faults.committed_steps(d) == 8 > committed_before
+
+
+# ---------------------------------------------------------------------------
+# Torn files and graceful degradation.
+# ---------------------------------------------------------------------------
+
+
+def _corrupt_one_byte(path):
+    with open(path, "r+b") as f:
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ 0xFF]))
+
+
+def test_torn_checkpoint_falls_back_and_recovers(runtime, reference,
+                                                 tmp_path):
+    """Corrupting the newest checkpoint's shard is DETECTED (crc) and the
+    service falls back to the previous verified step, then re-trains the
+    gap deterministically — final state still bitwise equals the oracle."""
+    d = str(tmp_path)
+    args = faults.make_args(d)
+    outcome, _ = faults.run_service(args, runtime)
+    assert outcome == "complete"
+    ckpt = os.path.join(d, "ckpt", "step_00000008")
+    shard = next(os.path.join(ckpt, f) for f in sorted(os.listdir(ckpt))
+                 if f.startswith("shard_"))
+    _corrupt_one_byte(shard)
+    assert faults.committed_steps(d) == 6  # fallback target
+    outcome2, status = faults.run_service(args, runtime)
+    assert outcome2 == "complete" and status["committed"] == 8
+    assert faults.state_digest(d) == faults.state_digest(reference)
+
+
+def test_ledger_torn_tail_is_discarded(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = PrivacyLedger(path)
+    recs = [{"step": i, "q": 0.01, "sigma": 1.0,
+             "orders_crc": svc_mod._ORDERS_CRC} for i in range(3)]
+    for r in recs:
+        led.append(r)
+    led.close()
+    with open(path, "ab") as f:  # a half-written append, as a crash leaves
+        f.write(b'{"step":3,"q":0.0')
+    out = PrivacyLedger(path).replay()
+    assert [r["step"] for r in out] == [0, 1, 2]
+    # the torn tail was truncated away so the NEXT append starts clean
+    led2 = PrivacyLedger(path)
+    led2.append({"step": 3, "q": 0.01, "sigma": 1.0,
+                 "orders_crc": svc_mod._ORDERS_CRC})
+    led2.close()
+    assert [r["step"] for r in PrivacyLedger(path).replay()] == [0, 1, 2, 3]
+
+
+def test_ledger_midfile_corruption_refuses(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = PrivacyLedger(path)
+    for i in range(4):
+        led.append({"step": i, "q": 0.01, "sigma": 1.0,
+                    "orders_crc": svc_mod._ORDERS_CRC})
+    led.close()
+    with open(path, "rb") as f:
+        lines = f.read().splitlines(keepends=True)
+    lines[1] = b'{"step":1,"q":0.999,"sigma":0.0} deadbeef\n'  # bad crc
+    with open(path, "wb") as f:
+        f.writelines(lines)
+    with pytest.raises(LedgerCorrupt):
+        PrivacyLedger(path).replay()
+
+
+def test_ledger_step_gap_refuses(tmp_path):
+    path = str(tmp_path / "ledger.jsonl")
+    led = PrivacyLedger(path)
+    for step in (0, 2):  # gap at 1
+        led.append({"step": step, "q": 0.01, "sigma": 1.0,
+                    "orders_crc": svc_mod._ORDERS_CRC})
+    led.close()
+    with pytest.raises(LedgerCorrupt):
+        PrivacyLedger(path).replay()
+
+
+def test_retry_backoff_caps_and_gives_up():
+    sleeps = []
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 3:
+            raise OSError("transient")
+        return "ok"
+
+    out = with_retries(flaky, retries=4, base_delay=0.05, max_delay=0.15,
+                       sleep=sleeps.append)
+    assert out == "ok" and calls["n"] == 4
+    assert sleeps == [0.05, 0.1, 0.15]  # exponential, capped
+
+    with pytest.raises(OSError):
+        with_retries(lambda: (_ for _ in ()).throw(OSError("hard")),
+                     retries=2, base_delay=0.01, sleep=sleeps.append)
+
+
+def test_fault_injector_validation():
+    with pytest.raises(ValueError):
+        FaultInjector(point="no-such-point", step=1)
+    inj = FaultInjector.parse("post-ledger-append:7", mode="raise")
+    with pytest.raises(SimulatedCrash):
+        inj.fire("post-ledger-append", 7)
+    inj.fire("post-ledger-append", 6)  # wrong step: no-op
+    inj.fire("pre-ledger-append", 7)  # wrong point: no-op
+    assert FaultInjector.parse(None).point is None
+
+
+def test_mechanism_mismatch_refuses(runtime, tmp_path):
+    """A ledger spent at a different (q, sigma) must not silently continue
+    under this service's mechanism."""
+    d = str(tmp_path)
+    os.makedirs(d, exist_ok=True)
+    led = PrivacyLedger(os.path.join(d, "ledger.jsonl"))
+    led.append({"step": 0, "q": 0.5, "sigma": 2.0,
+                "orders_crc": svc_mod._ORDERS_CRC})
+    led.close()
+    with pytest.raises(LedgerCorrupt):
+        svc_mod.TrainService(faults.make_args(d), runtime=runtime,
+                             sleep=lambda _: None)

@@ -1,16 +1,22 @@
 """Data pipeline, optimizers, schedules, checkpointing."""
+import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
+import msgpack
 import numpy as np
+import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # container lacks hypothesis; deterministic shim
     from _hypothesis_compat import given, settings, st
 
 from repro import optim
-from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.checkpoint import (CheckpointCorrupt, latest_step,
+                              latest_verified_step, load_checkpoint,
+                              load_latest_checkpoint, load_manifest,
+                              save_checkpoint, verify_checkpoint)
 from repro.data import (ByteCorpus, PoissonSampler, SyntheticLM,
                         make_lm_batch, pack_documents)
 
@@ -22,6 +28,38 @@ def test_poisson_sampler_statistics():
     assert abs(np.mean(sizes) - 100) < 10  # E = N * rate = 100
     assert np.std(sizes) > 5  # genuinely random sizes (not fixed-size)
     assert ps.overflow_count == 0
+
+
+def test_poisson_sampler_state_resumes_exact_stream():
+    ps = PoissonSampler(num_examples=500, rate=0.05, max_batch=60, seed=3)
+    for _ in range(4):
+        ps.next_indices()
+    snap = ps.state()
+    msgpack.packb(snap)  # must ride in a checkpoint manifest as-is
+    expected = [ps.next_indices() for _ in range(5)]
+    fresh = PoissonSampler(num_examples=500, rate=0.05, max_batch=60, seed=3)
+    fresh.restore(snap)
+    assert fresh.draws == 4
+    got = [fresh.next_indices() for _ in range(5)]
+    for a, b in zip(expected, got):
+        np.testing.assert_array_equal(a, b)
+    # a restart WITHOUT restore would restart the stream — the bug resume
+    # used to have; prove the streams actually differ so the test has teeth
+    restarted = PoissonSampler(num_examples=500, rate=0.05, max_batch=60,
+                               seed=3)
+    assert any(not np.array_equal(a, restarted.next_indices())
+               for a in expected)
+
+
+def test_poisson_sampler_restore_refuses_mismatched_corpus():
+    ps = PoissonSampler(num_examples=500, rate=0.05, max_batch=60, seed=3)
+    snap = ps.state()
+    other = PoissonSampler(num_examples=400, rate=0.05, max_batch=60, seed=3)
+    with pytest.raises(ValueError):
+        other.restore(snap)
+    other2 = PoissonSampler(num_examples=500, rate=0.04, max_batch=60, seed=3)
+    with pytest.raises(ValueError):
+        other2.restore(snap)
 
 
 def test_padding_rows_are_inert():
@@ -142,3 +180,111 @@ def test_checkpoint_load_with_shardings_validates_and_places():
         np.testing.assert_array_equal(out["a"], tree["a"])
         with pytest.raises(ValueError, match="leaf-for-leaf"):
             load_checkpoint(d, 1, tree, shardings={"a": sharding})
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe checkpointing: atomicity, checksums, fallback.
+# ---------------------------------------------------------------------------
+
+
+def _tree():
+    return {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+            "b": jnp.full((8,), 2.5, jnp.float32)}
+
+
+def test_checkpoint_atomic_no_partial_step_on_crash():
+    """A kill before the rename leaves NO step directory — only an inert
+    tmp- stage that latest_step/load never see, and that a re-save of the
+    same step cleans up."""
+    class Boom(RuntimeError):
+        pass
+
+    def hook(stage):
+        if stage == "pre-rename":
+            raise Boom()
+
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        with pytest.raises(Boom):
+            save_checkpoint(d, 2, _tree(), fault_hook=hook)
+        assert latest_step(d) == 1  # the torn publish is invisible
+        assert any(f.startswith("tmp-") for f in os.listdir(d))
+        save_checkpoint(d, 2, _tree())  # retry reuses/clears the stage
+        assert latest_step(d) == 2
+        assert verify_checkpoint(d, 2)
+        assert not any(f.startswith("tmp-") for f in os.listdir(d))
+
+
+def test_checkpoint_resave_same_step_stays_complete():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, _tree())
+        tree2 = {"w": -jnp.ones((8, 8), jnp.float32),
+                 "b": jnp.zeros((8,), jnp.float32)}
+        save_checkpoint(d, 5, tree2)
+        out = load_checkpoint(d, 5, tree2, verify=True)
+        np.testing.assert_array_equal(out["w"], tree2["w"])
+        assert not any(f.startswith("tmp-") for f in os.listdir(d))
+
+
+def test_checkpoint_checksums_detect_torn_write():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        step_dir = os.path.join(d, "step_00000001")
+        shard = next(os.path.join(step_dir, f)
+                     for f in sorted(os.listdir(step_dir))
+                     if f.startswith("shard_"))
+        # flip one byte mid-shard: decompression may still "succeed", the
+        # per-leaf crc32 is what must catch it
+        with open(shard, "r+b") as f:
+            f.seek(os.path.getsize(shard) // 2)
+            byte = f.read(1)
+            f.seek(-1, os.SEEK_CUR)
+            f.write(bytes([byte[0] ^ 0xFF]))
+        assert not verify_checkpoint(d, 1)
+        with pytest.raises(CheckpointCorrupt):
+            load_checkpoint(d, 1, _tree(), verify=True)
+
+
+def test_checkpoint_truncated_shard_detected():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        step_dir = os.path.join(d, "step_00000001")
+        shard = next(os.path.join(step_dir, f)
+                     for f in sorted(os.listdir(step_dir))
+                     if f.startswith("shard_"))
+        with open(shard, "r+b") as f:
+            f.truncate(os.path.getsize(shard) // 2)
+        assert not verify_checkpoint(d, 1)
+        with pytest.raises(CheckpointCorrupt):
+            load_checkpoint(d, 1, _tree(), verify=True)
+
+
+def test_load_latest_falls_back_past_corrupt_step():
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, _tree())
+        save_checkpoint(d, 2, _tree(), meta={"tag": "newest"})
+        step_dir = os.path.join(d, "step_00000002")
+        shard = next(os.path.join(step_dir, f)
+                     for f in sorted(os.listdir(step_dir))
+                     if f.startswith("shard_"))
+        with open(shard, "r+b") as f:
+            f.truncate(1)
+        assert latest_step(d) == 2          # present...
+        assert latest_verified_step(d) == 1  # ...but not trustworthy
+        found = load_latest_checkpoint(d, _tree())
+        assert found is not None
+        step, out, manifest = found
+        assert step == 1
+        np.testing.assert_array_equal(out["w"], _tree()["w"])
+        assert load_latest_checkpoint(tempfile.mkdtemp(), _tree()) is None
+
+
+def test_checkpoint_meta_roundtrip():
+    meta = {"sampler": {"rng": "{...}", "draws": 7}, "epsilon": 1.25,
+            "ledger_records": 9}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 3, _tree(), meta=meta)
+        manifest = load_manifest(d, 3)
+        assert manifest["meta"] == meta
+        assert manifest["step"] == 3
+        assert all("crc32" in leaf for leaf in manifest["leaves"])
