@@ -1,16 +1,26 @@
 """Kernel-level microbenchmarks: ghost-op backends across (B, T, d).
 
 Sweeps the backend engine (`repro.kernels.backend`) — xla reference paths
-vs the Pallas kernels (ghost_norm / clip_reduce / fused_norm_clip) — over a
-grid of shapes, plus the naive per-example materialization baseline. Writes
+vs the Pallas kernels — over a grid of shapes for EVERY engine op the auto
+backend dispatches on (norms / clip_sum / linear_clip / scale_contract /
+paged_attn), plus the naive per-example materialization baseline. Writes
 ``benchmarks/BENCH_kernels.json`` so the perf trajectory is tracked across
-PRs.
+PRs, and SEEDS the measured autotune table (`repro.kernels.autotune`) from
+the timed records — this is how a fleet image ships with `auto` already
+resolved to the measured argmin per (op, shape-bucket). Each record carries
+two choice annotations:
+
+  auto_choice        what `auto` picks AFTER this run's measurements are
+                     seeded (the measured argmin for the record's bucket)
+  auto_choice_model  what the static flop model alone would pick — the
+                     unmeasured-bucket fallback, kept for comparison
 
 On CPU (this container) the Pallas kernels run in INTERPRET mode: their
 timings are recorded with ``"representative": false`` and characterize
-correctness cost only — the timed xla-vs-naive comparison is the paper's
-memory/time argument at op granularity. On TPU the same sweep times the
-compiled Mosaic kernels.
+correctness cost only — but they still seed the table for THIS topology
+(the table is topology-stamped, so CPU measurements never leak to TPU; and
+where interpret mode measured faster, it is faster). On TPU the same sweep
+times the compiled Mosaic kernels.
 """
 from __future__ import annotations
 
@@ -22,13 +32,54 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import csv_line, timeit, topology
-from repro.kernels import backend
+from repro.kernels import autotune, backend
 
 _OUT_PATH = os.path.join(os.path.dirname(__file__), "BENCH_kernels.json")
 
 # (B, T, din, dout) sweep — quick keeps interpret-mode cost tolerable
 SHAPES_QUICK = [(4, 128, 128, 128), (4, 256, 256, 256)]
 SHAPES_FULL = [(4, 512, 256, 256), (8, 1024, 512, 512), (8, 2048, 1024, 1024)]
+
+
+def _op_args(op: str, shape, a, g, f, c):
+    """Operands per engine op; paged_attn/scale_contract come from the
+    shared autotune helpers so the bench seeds the SAME buckets the engine
+    looks up at trace time."""
+    if op == "norms":
+        return (a, g)
+    if op == "clip_sum":
+        return (a, g, f)
+    if op == "linear_clip":
+        return (a, g, c)
+    if op == "scale_contract":
+        return (jnp.stack([a, a * 0.5]), jnp.stack([g, g * 2.0]),
+                jnp.stack([f, f]))
+    if op == "paged_attn":
+        return autotune.paged_attn_data(shape)
+    raise ValueError(op)
+
+
+def _op_fn(eng, op: str, shape):
+    import functools
+    if op == "paged_attn":
+        _, _, din, _ = shape
+        scale = 1.0 / (min(din, 64) ** 0.5)
+        return jax.jit(functools.partial(eng.paged_attn, scale=scale))
+    return jax.jit({
+        "norms": eng.linear_norms_sq,
+        "clip_sum": eng.clipped_sum_linear,
+        "linear_clip": eng.linear_clip,
+        "scale_contract": eng.scale_contract,
+    }[op])
+
+
+def _table_dims(op: str, shape):
+    """(t, din, dout) table coordinates for one record."""
+    b, t, din, dout = shape
+    if op == "paged_attn":
+        q, kp, vp, pt, _ = autotune.paged_attn_data(shape)
+        return autotune.paged_attn_dims(q, pt, kp.shape[1], vp.shape[-1])
+    return t, din, dout
 
 
 def _bench_backend(name: str, shape, a, g, f, c, interpret_ok: bool,
@@ -50,28 +101,24 @@ def _bench_backend(name: str, shape, a, g, f, c, interpret_ok: bool,
         lines.append(csv_line(f"kernel_pallas_skipped__{tag}", 0.0,
                               "interpret-mode too slow off-TPU"))
         return
-    ops = {
-        "norms": jax.jit(eng.linear_norms_sq),
-        "clip_sum": jax.jit(eng.clipped_sum_linear),
-        "linear_clip": jax.jit(eng.linear_clip),
-    }
-    args = {
-        "norms": (a, g),
-        "clip_sum": (a, g, f),
-        "linear_clip": (a, g, c),
-    }
-    for op, fn in ops.items():
-        us = timeit(fn, *args[op])
+    for op in autotune.OPS:
+        fn = _op_fn(eng, op, shape)
+        args = _op_args(op, shape, a, g, f, c)
+        us = timeit(fn, *args)
+        tt, tdi, tdo = _table_dims(op, shape)
         rec = {
             "name": f"kernel_{op}_{name}", "shape": tag,
-            "b": b, "t": t, "din": din, "dout": dout,
+            "b": b, "t": tt, "din": tdi, "dout": tdo,
             "us_per_call": round(us, 1),
             "backend": name,
             "representative": rep,
+            # the static model's pick (the unmeasured-bucket fallback);
+            # auto_choice (post-seeding measured argmin) is annotated after
+            # the sweep in run()
+            "auto_choice_model": backend.choose_op(
+                op, tt, tdi, tdo,
+                backend.EngineConfig(autotune=False)),
         }
-        if op == "norms":
-            rec["auto_choice"] = backend.choose_linear_path(
-                t, din, dout, eng.config)
         records.append(rec)
         lines.append(csv_line(f"kernel_{op}_{name}__{tag}", us,
                               f"backend={name};rep={rep}"))
@@ -112,10 +159,32 @@ def run(quick: bool = True) -> list[str]:
             _bench_backend(name, shape, a, g, f, c, interpret_ok,
                            records, lines)
 
+    # seed the measured autotune table from this run, persist it, and
+    # annotate every op record with the post-seeding choice — the measured
+    # argmin that `auto` will now use on this topology
+    table = autotune.seed_from_records(records)
+    try:
+        table.save()
+        lines.append(csv_line("kernel_autotune_table_saved", 0.0,
+                              f"{table.path};buckets={len(table)}"))
+    except OSError as e:  # read-only checkout: the bench still reports
+        lines.append(csv_line("kernel_autotune_table_saved", 0.0,
+                              f"SKIPPED:{type(e).__name__}"))
+    cfg = backend.EngineConfig()
+    for rec in records:
+        name = rec.get("name", "")
+        if not name.startswith("kernel_") or "skipped" in name \
+                or rec.get("backend") == "naive":
+            continue
+        op = name[len("kernel_"):-(len(rec["backend"]) + 1)]
+        rec["auto_choice"] = backend.choose_op(
+            op, rec["t"], rec["din"], rec["dout"], cfg, table=table)
+
     payload = {
         "topology": topology(),
         "unix_time": int(time.time()),
         "quick": quick,
+        "autotune_table": table.path,
         "records": records,
     }
     # keyed by mode so the common quick run never clobbers a saved full sweep

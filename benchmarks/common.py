@@ -1,7 +1,6 @@
 """Shared benchmark harness utilities."""
 from __future__ import annotations
 
-import os
 import time
 
 import jax
@@ -15,12 +14,10 @@ from repro.core.spec import GroupLayout, P, init_params
 def topology() -> dict:
     """Device-topology metadata stamped into every BENCH_*.json record, so
     numbers from different machines / virtual-device configurations are
-    never compared blind across PRs."""
-    return {
-        "jax_backend": jax.default_backend(),
-        "device_count": jax.device_count(),
-        "xla_flags": os.environ.get("XLA_FLAGS", ""),
-    }
+    never compared blind across PRs. The same stamp keys the on-disk
+    autotune table and compile cache (repro.kernels.autotune)."""
+    from repro.kernels.autotune import topology_stamp
+    return topology_stamp()
 
 
 def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:

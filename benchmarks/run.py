@@ -70,10 +70,12 @@ def main() -> None:
 
     from benchmarks import (bench_epochs, bench_kernels, bench_quantile,
                             bench_scaling, bench_serve, bench_sharded,
-                            bench_throughput, bench_utility, roofline)
+                            bench_startup, bench_throughput, bench_utility,
+                            roofline)
     suites = [
         ("throughput", bench_throughput),
         ("kernels", bench_kernels),
+        ("startup", bench_startup),
         ("sharded", bench_sharded),
         ("serve", bench_serve),
         ("utility", bench_utility),

@@ -8,9 +8,13 @@
 # cache-byte budget (the fixed-budget sweep in BENCH_serve.json).
 # Writes benchmarks/BENCH_throughput.json + BENCH_serve.json and
 # refreshes the cross-PR aggregate benchmarks/BENCH_summary.json.
+# bench_startup --smoke additionally ASSERTS that a warm start through the
+# persistent compile cache beats the cold start for BOTH the train and
+# serve entry points (BENCH_startup.json records the margin).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m benchmarks.bench_throughput
 python -m benchmarks.bench_serve --smoke
+python -m benchmarks.bench_startup --smoke
 python -m benchmarks.run --aggregate-only

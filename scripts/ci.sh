@@ -79,6 +79,33 @@ EOF
 rm -rf "$SVC_ROOT"
 cd scripts
 
+# ---- autotune round trip: the timing sweep persists its table in one
+# process and a SECOND process (a fleet worker, after pre-warm) loads it
+# and resolves `auto` to the measured argmin on every measured bucket.
+cd ..
+AT_ROOT="$(mktemp -d /tmp/repro_autotune_ci.XXXXXX)"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.kernels.autotune --sweep --cache-dir "$AT_ROOT"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - "$AT_ROOT" <<'EOF'
+import sys
+from repro.kernels import autotune, backend
+tab = autotune.install_default(sys.argv[1])
+assert tab.stale_reason is None and len(tab) > 0, tab.stale_reason
+cfg = backend.EngineConfig(backend="auto")
+for key, slot in tab.entries.items():
+    op, t, di, do = key.split("|")
+    t, di, do = (int(x[1:]) for x in (t, di, do))
+    measured = {b: v["us"] for b, v in slot.items()
+                if v["source"] == "measured"}
+    want = min(measured, key=measured.get)
+    got = backend.choose_op(op, t, di, do, cfg)
+    assert got == want, (key, got, want)
+print(f"autotune round-trip OK: {len(tab)} buckets, auto == measured "
+      "argmin in a second process")
+EOF
+rm -rf "$AT_ROOT"
+cd scripts
+
 # ---- sharded stage: the multi-device engine on 8 virtual CPU devices ----
 # Runs the full sharded check suite (parity + the zero-model-axis-norm-
 # collectives HLO assertion) with the forced device count, then a quick

@@ -210,6 +210,25 @@ def verify_checkpoint(directory: str, step: int) -> bool:
         return False
 
 
+def _owned_device_copy(arr: np.ndarray) -> jax.Array:
+    """A runtime-OWNED device array with `arr`'s contents.
+
+    `jnp.asarray` over a `np.frombuffer` view is zero-copy on CPU: the jax
+    array aliases host memory the XLA runtime does not own. Restored state
+    is fed straight into the DONATING train step (`jit_step`,
+    donate_argnums=(0, 1, 2)), and donating an external, host-backed
+    buffer into an executable that was DESERIALIZED from the persistent
+    compilation cache corrupts memory on this jaxlib (garbage outputs,
+    heap aborts — the resume leg of the service fault matrix hit all of
+    them; freshly compiled executables handle the same donation fine).
+    Routing the bytes through an explicit copy makes the leaf the output
+    of an XLA execution, so the runtime owns its buffer and donation is
+    safe regardless of how the step executable was obtained."""
+    copied = jnp.copy(jnp.asarray(arr))
+    assert copied.unsafe_buffer_pointer() != arr.ctypes.data
+    return copied
+
+
 def load_checkpoint(directory: str, step: int, template, *, shardings=None,
                     verify: bool = False):
     """Restore into the structure of `template` (shapes must match).
@@ -256,11 +275,11 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None,
                 f"{path}: leaf {li} crc mismatch (torn write?)")
         if meta["dtype"] == "bfloat16":
             arr = np.frombuffer(raw, np.uint16).reshape(meta["shape"])
-            leaves.append(jnp.asarray(arr).view(jnp.bfloat16))
+            leaves.append(_owned_device_copy(arr).view(jnp.bfloat16))
         else:
             arr = np.frombuffer(raw, np.dtype(meta["dtype"])).reshape(
                 meta["shape"])
-            leaves.append(jnp.asarray(arr))
+            leaves.append(_owned_device_copy(arr))
     treedef = jax.tree_util.tree_structure(template)
     if treedef.num_leaves != len(leaves):
         raise ValueError(

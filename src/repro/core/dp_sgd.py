@@ -63,9 +63,13 @@ class DPConfig:
     # --- ghost-op backend (repro.kernels.backend) ---
     backend: str = "auto"  # xla | pallas | auto — engine for the ghost ops;
     #   scoped around the step function so jitted traces capture it
-    #   statically. auto resolves to xla off-TPU. None-like inheritance of
-    #   tunables (outer_max_elems, tile sizes) comes from the enclosing
-    #   backend.scoped(...) if any.
+    #   statically. auto picks the measured argmin per (op, shape bucket)
+    #   when an autotune table is installed (repro.kernels.autotune) and
+    #   falls back to the static cost model (xla off-TPU) on unmeasured
+    #   buckets. None-like inheritance of tunables (outer_max_elems, tile
+    #   sizes) comes from the enclosing backend.scoped(...) if any.
+    autotune: bool = True  # False pins auto to the static model even with
+    #   a table installed (--autotune off)
     # --- misc ---
     noise_dtype: Any = jnp.float32
     microbatches: int = 1  # gradient accumulation (Algorithm 2 structure):
@@ -388,7 +392,7 @@ def make_dp_train_step(
         # scoped (not global) engine: the jitted trace of this function
         # captures cfg.backend statically; tunables inherit from any
         # enclosing backend.scoped(...) (e.g. the dry-run's outer cap).
-        with ghost_backend.scoped(cfg.backend):
+        with ghost_backend.scoped(cfg.backend, autotune=cfg.autotune):
             return _step(params, opt_state, dp_state, batch, key)
 
     def _step(params, opt_state, dp_state, batch, key):
@@ -528,7 +532,7 @@ def _make_sharded_step(loss_fn, spec, layout, optimizer, cfg: DPConfig, *,
         return ShardedClipResult(g_sum, norms, loss_sum / nmb, counts)
 
     def _body(params, opt_state, dp_state, batch, key):
-        with ghost_backend.scoped(cfg.backend):
+        with ghost_backend.scoped(cfg.backend, autotune=cfg.autotune):
             k_noise, k_q = jax.random.split(
                 jax.random.fold_in(key, dp_state.step))
             thresholds = _effective_thresholds(cfg, plan, dp_state)

@@ -13,9 +13,14 @@ backends are registered:
           kernels/fused_clip.py). On TPU they compile to Mosaic; on CPU
           they run in interpret mode (correctness validation — slow, tests
           only). Ops with no kernel fall back to the xla implementations.
-  auto    per-op cost-model choice between the two, reusing
-          `gram_path_cost` / `outer_path_cost` plus a VMEM-footprint guard.
-          On non-TPU backends auto always resolves to xla.
+  auto    per-op empirical choice between the two: when an autotune table
+          (repro.kernels.autotune) is installed and has measured this
+          (op, shape-bucket), the measured argmin wins — on ANY jax
+          backend. Unmeasured buckets fall back to the static cost model
+          (`gram_path_cost` / `outer_path_cost` plus a VMEM-footprint
+          guard), where the non-TPU short-circuit to xla still applies
+          (interpret-mode kernels are validation-only *until measured
+          faster*).
 
 Backend selection matrix (op x backend), CPU behavior in parens:
 
@@ -38,6 +43,8 @@ Backend selection matrix (op x backend), CPU behavior in parens:
       `prefer_fused=False` around their norms-only backward.
 
 How `auto` chooses for a linear (B, T, din, dout):
+  0. `config.autotune` and the installed autotune table has a measurement
+     for this (op, shape bucket) -> the measured argmin backend;
   1. outer path allowed (din·dout <= outer_max_elems) and cheaper by flops
      -> xla outer path (one einsum, no kernel beats it);
   2. else gram regime: T >= bt and the kernel's working set
@@ -63,6 +70,7 @@ import jax.numpy as jnp
 
 from repro.core import ghost
 from repro.core.ghost import clip_factor
+from repro.kernels import autotune
 from repro.kernels.bk import scale_contract as scale_contract_kernel
 from repro.kernels.clip_reduce import clip_reduce
 from repro.kernels.fused_clip import fused_norm_clip
@@ -74,7 +82,7 @@ from repro.kernels.ref import paged_attn_ref
 __all__ = [
     "EngineConfig", "Backend", "XlaBackend", "PallasBackend", "AutoBackend",
     "register_backend", "backends", "make_engine", "active", "scoped",
-    "clip_factor", "choose_linear_path",
+    "clip_factor", "choose_linear_path", "choose_op",
 ]
 
 
@@ -101,6 +109,11 @@ class EngineConfig:
     # they only consume norms², and XLA can dead-code-eliminate the unused
     # dW einsum of the composed path but never half of one pallas_call.
     prefer_fused: bool = True
+    # True -> the auto backend consults the installed autotune table
+    # (repro.kernels.autotune.installed_table()) before the static cost
+    # model; measured (op, shape-bucket) argmins then win on any jax
+    # backend. False pins auto to the static model regardless of tables.
+    autotune: bool = True
     # True -> the dp_* custom VJPs are in a book-keeping capture pass
     # (repro.core.bk): when a BkChannel threshold reaches a primitive, its
     # backward rule emits per-example norms² AND stashes the (a, g) ghost
@@ -198,13 +211,15 @@ class Backend:
         return jnp.einsum("sbti,sbto->sio", a32, gs)
 
     # -- paged decode attention (launch.engine data plane) -----------------
-    def paged_impl(self) -> str:
+    def paged_impl(self, *, t=None, din=None, dout=None) -> str:
         """Which implementation `paged_attn` resolves to: 'xla'|'pallas'.
 
         The serve paths branch on this statically at trace time: the xla
         gather path is the bitwise oracle (its math replicates the
         contiguous decode exactly), the pallas kernel is the TPU
         paged-gather path (allclose-level, different softmax association).
+        The auto backend takes optional shape hints so its decision can
+        come from the autotune table; fixed backends ignore them.
         """
         return "xla"
 
@@ -288,7 +303,7 @@ class PallasBackend(Backend):
                                      bj=self.config.bj, bt=self.config.bt,
                                      interpret=self._interpret())
 
-    def paged_impl(self) -> str:
+    def paged_impl(self, *, t=None, din=None, dout=None) -> str:
         return "pallas"
 
     def paged_attn(self, q, kpool, vpool, pt, pos, *, scale, dv=None):
@@ -298,15 +313,18 @@ class PallasBackend(Backend):
 
 def choose_linear_path(t: int, din: int, dout: int, config: EngineConfig,
                        *, on_tpu: bool | None = None) -> str:
-    """The auto backend's decision for one linear ghost op: 'xla'|'pallas'.
-
-    Pure function of static shapes + config, exposed for tests and for the
-    benchmark sweep to report what auto WOULD pick.
+    """The STATIC cost model's decision for one linear ghost op:
+    'xla'|'pallas'. This is the fallback for shape buckets the autotune
+    table has never measured (`choose_op` is the full decision); pure
+    function of static shapes + config, exposed for tests and for the
+    benchmark sweep to report what the model alone would pick.
     """
     if on_tpu is None:
         on_tpu = jax.default_backend() == "tpu"
     if not on_tpu and config.interpret is not True:
-        return "xla"  # interpret-mode kernels are validation-only
+        # unmeasured + off-TPU: interpret-mode kernels are validation-only
+        # (a MEASURED interpret-mode win is honored by choose_op above)
+        return "xla"
     outer_cap = (ghost._OUTER_MAX_ELEMS if config.outer_max_elems is None
                  else config.outer_max_elems)
     outer_ok = din * dout <= outer_cap
@@ -321,6 +339,32 @@ def choose_linear_path(t: int, din: int, dout: int, config: EngineConfig,
     return "pallas"
 
 
+def choose_op(op: str, t: int, din: int, dout: int, config: EngineConfig,
+              *, on_tpu: bool | None = None,
+              table: "autotune.AutotuneTable | None" = None) -> str:
+    """The auto backend's FULL decision for one engine op: measured argmin
+    from the autotune table when this (op, shape bucket) has measurements
+    — honored on any jax backend — else the static model.
+
+    op is one of `autotune.OPS`; `table=None` consults the installed table
+    (`autotune.installed_table()`), which entry points install under their
+    --autotune knob and tests scope with `autotune.use_table`.
+    """
+    if config.autotune:
+        tab = table if table is not None else autotune.installed_table()
+        if tab is not None:
+            measured = tab.best(op, t, din, dout)
+            if measured is not None:
+                return measured
+    if op == "paged_attn":
+        # static fallback: the paged-gather DMA only pays off on TPU;
+        # off-TPU the xla gather path is the bitwise oracle
+        if on_tpu is None:
+            on_tpu = jax.default_backend() == "tpu"
+        return "pallas" if (on_tpu or config.interpret is True) else "xla"
+    return choose_linear_path(t, din, dout, config, on_tpu=on_tpu)
+
+
 @register_backend("auto")
 class AutoBackend(Backend):
     """Cost-model dispatch between the xla and pallas backends per op."""
@@ -330,47 +374,59 @@ class AutoBackend(Backend):
         self._xla = XlaBackend(config)
         self._pallas = PallasBackend(config)
 
-    def _pick(self, a, g) -> Backend:
+    def _pick(self, op: str, a, g) -> Backend:
         a3, g3 = ghost._as3d(a), ghost._as3d(g)
         t, din, dout = a3.shape[1], a3.shape[-1], g3.shape[-1]
-        choice = choose_linear_path(t, din, dout, self.config)
+        choice = choose_op(op, t, din, dout, self.config)
         return self._pallas if choice == "pallas" else self._xla
 
+    # blocked variants run the same underlying kernels as their unblocked
+    # ops, so they share the "norms"/"clip_sum" table buckets
     def linear_norms_sq(self, a, g):
-        return self._pick(a, g).linear_norms_sq(a, g)
+        return self._pick("norms", a, g).linear_norms_sq(a, g)
 
     def linear_norms_sq_blocked(self, a, g, num_blocks, *, block_axis="out"):
-        return self._pick(a, g).linear_norms_sq_blocked(
+        return self._pick("norms", a, g).linear_norms_sq_blocked(
             a, g, num_blocks, block_axis=block_axis)
 
     def clipped_sum_linear(self, a, g, factors):
-        return self._pick(a, g).clipped_sum_linear(a, g, factors)
+        return self._pick("clip_sum", a, g).clipped_sum_linear(a, g, factors)
 
     def clipped_sum_linear_blocked(self, a, g, factors, *, block_axis="out"):
-        return self._pick(a, g).clipped_sum_linear_blocked(
+        return self._pick("clip_sum", a, g).clipped_sum_linear_blocked(
             a, g, factors, block_axis=block_axis)
 
     def linear_clip(self, a, g, c, extra_norms_sq=None):
-        return self._pick(a, g).linear_clip(a, g, c, extra_norms_sq)
+        return self._pick("linear_clip", a, g).linear_clip(
+            a, g, c, extra_norms_sq)
 
     def scale_contract(self, a, g, factors):
         if a.ndim == 3:
-            return self._pick(a, g).scale_contract(a, g, factors)
+            return self._pick("scale_contract", a, g).scale_contract(
+                a, g, factors)
         t, din, dout = a.shape[2], a.shape[-1], g.shape[-1]
-        choice = choose_linear_path(t, din, dout, self.config)
+        choice = choose_op("scale_contract", t, din, dout, self.config)
         eng = self._pallas if choice == "pallas" else self._xla
         return eng.scale_contract(a, g, factors)
 
-    def paged_impl(self) -> str:
-        # the kernel's paged-gather DMA only pays off on TPU; off-TPU the
-        # interpret-mode kernel is validation-only, so auto stays on the
-        # (bitwise-oracle) xla gather path unless interpret is forced
+    def paged_impl(self, *, t=None, din=None, dout=None) -> str:
+        """With shape hints (logical context, query dim, value dim) this
+        consults the autotune table like every other op; without hints —
+        or unmeasured — the static rule applies: pallas only where the
+        paged-gather DMA pays off (TPU), xla's bitwise-oracle gather path
+        elsewhere (unless interpret is forced)."""
+        if t is not None:
+            return choose_op("paged_attn", t, din or 0, dout or 0,
+                             self.config)
         if jax.default_backend() == "tpu" or self.config.interpret is True:
             return "pallas"
         return "xla"
 
     def paged_attn(self, q, kpool, vpool, pt, pos, *, scale, dv=None):
-        eng = self._pallas if self.paged_impl() == "pallas" else self._xla
+        t, din, dout = autotune.paged_attn_dims(
+            q, pt, kpool.shape[1], dv if dv is not None else vpool.shape[-1])
+        impl = self.paged_impl(t=t, din=din, dout=dout)
+        eng = self._pallas if impl == "pallas" else self._xla
         return eng.paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
 
 

@@ -412,7 +412,21 @@ def main() -> int:
                          "breakdown (collectives_by_axis)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--cache", default="off", choices=["on", "off"],
+                    help="persistent compilation cache for the lowered "
+                         "programs (repro.launch.compile_cache). Default "
+                         "OFF: the dry-run's compile_s numbers measure the "
+                         "compiler, and a warm cache would zero them; turn "
+                         "on to pre-warm a fleet cache from the production "
+                         "program set")
+    ap.add_argument("--cache-dir", default=None,
+                    help="cache root for --cache on (default <repo>/.cache "
+                         "or $REPRO_CACHE_DIR)")
     args = ap.parse_args()
+
+    if args.cache != "off":
+        from repro.launch import compile_cache
+        compile_cache.enable(args.cache_dir)
 
     debug = args.mesh == "debug"
     combos = []

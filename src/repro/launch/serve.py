@@ -177,12 +177,32 @@ def main():
                     help="prepend this many common system-prompt tokens "
                          "to every request; full pages of it are shared "
                          "physically when paging is on")
+    ap.add_argument("--backend", default="auto",
+                    choices=["xla", "pallas", "auto"],
+                    help="decode-attention engine scope "
+                         "(repro.kernels.backend); auto resolves the "
+                         "paged-attention path from the measured autotune "
+                         "table, falling back to xla off-TPU")
+    ap.add_argument("--autotune", default="on", choices=["on", "off"],
+                    help="on: auto consults the measured table for this "
+                         "topology (repro.kernels.autotune)")
+    ap.add_argument("--cache", default="on", choices=["on", "off"],
+                    help="persistent compilation cache: warm starts "
+                         "deserialize the serving programs instead of "
+                         "recompiling (repro.launch.compile_cache)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="cache root (default <repo>/.cache or "
+                         "$REPRO_CACHE_DIR)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    from repro.launch.train import record_cache_program, setup_caches
+    setup_caches(args)
 
     cfg = get_config(args.arch, reduced=args.reduced)
     model = build_model(cfg)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
+    record_cache_program(args, entry="serve", arch=cfg.name)
 
     from repro.launch.inputs import pad_ragged_prompts, synthetic_requests
     lo = (args.prompt_len if args.min_prompt_len is None
@@ -196,6 +216,15 @@ def main():
         reqs = [np.concatenate([sysp, np.asarray(r, np.int32)])
                 for r in reqs]
     cache_len = args.shared_prefix + args.prompt_len + args.gen + 8
+
+    # scoped engine: the serving traces capture the backend (and its
+    # autotune consultation) statically, exactly like the train step
+    from contextlib import ExitStack
+
+    from repro.kernels import backend as KB
+    scope = ExitStack()
+    scope.enter_context(KB.scoped(args.backend,
+                                  autotune=args.autotune != "off"))
 
     t0 = time.time()
     if args.mode == "engine":
@@ -235,6 +264,7 @@ def main():
             prefill=args.prefill, lengths=jnp.asarray(lengths)))
         wall = time.time() - t0
         extra = f"prefill={args.prefill}"
+    scope.close()
     total = sum(len(r) for r in reqs) + args.batch * args.gen
     print(f"# arch={cfg.name} mode={args.mode} batch={args.batch} "
           f"prompt_lens={[len(r) for r in reqs]} {extra} "

@@ -490,7 +490,13 @@ def build_service_parser() -> argparse.ArgumentParser:
 
 def main(argv=None) -> int:
     args = build_service_parser().parse_args(argv)
+    # warm start: reuse persisted compiled step programs + the measured
+    # autotune table (the daemon restarts on every crash/resume cycle, so
+    # cold retrace+compile would otherwise be paid per incarnation)
+    from repro.launch.train import record_cache_program, setup_caches
+    setup_caches(args)
     svc = TrainService(args)
+    record_cache_program(args, entry="service", arch=svc.runtime.cfg.name)
     print(f"# service dir={args.service_dir} arch={svc.runtime.cfg.name} "
           f"mode={svc.runtime.plan.config.mode} q={svc.q:.5f} "
           f"sigma={svc.sigma:.4f} budget_eps={svc.budget_eps} "

@@ -65,6 +65,7 @@ def build_everything(args):
         epsilon=args.epsilon if args.sigma is None else None,
         sigma=args.sigma, delta=args.delta,
         sampling_rate=args.batch / rows.shape[0], steps=args.steps,
+        autotune=getattr(args, "autotune", "on") != "off",
         adaptive=not args.fixed_thresholds,
         init_threshold=args.init_threshold,
         target_quantile=args.quantile,
@@ -137,7 +138,21 @@ def build_arg_parser(**kwargs) -> argparse.ArgumentParser:
                     help="ghost-op engine (repro.kernels.backend): xla "
                          "reference paths, pallas kernels (interpret mode "
                          "off-TPU — slow, validation only), or auto "
-                         "cost-model dispatch")
+                         "measured/cost-model dispatch")
+    ap.add_argument("--autotune", default="on", choices=["on", "off"],
+                    help="on: auto consults the measured autotune table "
+                         "for this topology (repro.kernels.autotune; "
+                         "pre-warm with `python -m repro.kernels.autotune "
+                         "--sweep`); off: static cost model only")
+    ap.add_argument("--cache", default="on", choices=["on", "off"],
+                    help="persistent compilation cache "
+                         "(repro.launch.compile_cache): warm starts "
+                         "deserialize compiled step programs instead of "
+                         "recompiling")
+    ap.add_argument("--cache-dir", default=None,
+                    help="cache root for the autotune table AND the "
+                         "compile cache (default <repo>/.cache or "
+                         "$REPRO_CACHE_DIR)")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--resume", action="store_true",
                     help="continue from the newest VERIFIED checkpoint in "
@@ -168,11 +183,43 @@ def jit_step(step_fn, model, mesh):
     return jax.jit(step_fn, donate_argnums=(0, 1, 2))
 
 
+def setup_caches(args) -> None:
+    """Enable the persistent compile cache and install the autotune table
+    per the shared --cache/--autotune/--cache-dir flags (train, service,
+    and serve all start here). Best-effort: cache trouble never kills a
+    worker — it degrades to a cold compile / the static cost model."""
+    from repro.kernels import autotune
+    from repro.launch import compile_cache
+    if getattr(args, "cache", "on") != "off":
+        compile_cache.enable(getattr(args, "cache_dir", None))
+    if getattr(args, "autotune", "on") != "off":
+        autotune.install_default(getattr(args, "cache_dir", None))
+
+
+def record_cache_program(args, *, entry: str, arch: str) -> None:
+    """Stamp this entry point's semantic program key into the cache index
+    (observability: which programs a warmed image actually covers)."""
+    from repro.launch import compile_cache
+    if getattr(args, "cache", "on") == "off":
+        return
+    import jax as _jax
+    compile_cache.record_program({
+        "entry": entry, "arch": arch,
+        "mesh": getattr(args, "mesh", None) or "none",
+        "backend": getattr(args, "backend", "auto"),
+        "execution": getattr(args, "execution", "bk"),
+        "clipping": getattr(args, "clipping", None) or "none",
+        "jax_version": _jax.__version__,
+    }, root=getattr(args, "cache_dir", None))
+
+
 def main():
     args = build_arg_parser().parse_args()
+    setup_caches(args)
 
     (cfg, model, rows, sampler, init_fn, step_fn, plan,
      mesh) = build_everything(args)
+    record_cache_program(args, entry="train", arch=cfg.name)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
     opt_state, dp_state = init_fn(params)
     start_step = 0

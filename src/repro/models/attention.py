@@ -496,7 +496,10 @@ def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
     q_lat = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))  # (B, 1, H, lr)
 
-    if KB.active().paged_impl() == "pallas":
+    # shape hints keep this branch and the engine's own paged_attn dispatch
+    # on the SAME autotune bucket (t = logical context, din/dout = head dims)
+    if KB.active().paged_impl(t=pt.shape[1] * latpool.shape[1],
+                              din=lr + rope, dout=lr) == "pallas":
         q_cat = jnp.concatenate(
             [q_lat, q_rope.astype(jnp.float32)], axis=-1)  # (B, 1, H, lr+r)
         lat = KB.active().paged_attn(

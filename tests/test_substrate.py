@@ -128,6 +128,40 @@ def test_checkpoint_roundtrip():
                                           np.asarray(b, np.float32))
 
 
+def test_checkpoint_leaves_are_runtime_owned():
+    """Restored leaves must be XLA-runtime-owned buffers, never zero-copy
+    views over the decompressed shard bytes. They are fed straight into
+    the donating train step (jit_step, donate_argnums=(0, 1, 2)), and
+    donating a host-backed buffer into an executable deserialized from
+    the persistent compile cache corrupts memory on this jaxlib — the
+    service fault matrix caught it as non-bitwise resumes, NaNs, and heap
+    aborts. Deterministic proxy: a zero-copy jax array aliases the numpy
+    view's memory (unsafe_buffer_pointer == ctypes.data); owned copies
+    must not."""
+    from repro.checkpoint.store import _owned_device_copy
+    # zero-copy only engages for 64-byte-aligned host pointers (which is
+    # why the corruption was intermittent: it tracked where malloc placed
+    # the decompressed shard bytes) — build an aligned view so the hazard
+    # precondition holds deterministically
+    buf = np.ones(64 * 64 + 16, np.float32)
+    off = ((-buf.ctypes.data) % 64) // 4
+    view = buf[off:off + 64 * 64].reshape(64, 64)
+    assert view.ctypes.data % 64 == 0
+    assert jnp.asarray(view).unsafe_buffer_pointer() == view.ctypes.data, \
+        "zero-copy aliasing gone on this jaxlib; hazard may have moved"
+    assert (_owned_device_copy(view).unsafe_buffer_pointer()
+            != view.ctypes.data)
+    tree = {"w": jnp.linspace(0, 1, 256).astype(jnp.float32),
+            "h": jnp.ones((4, 4), jnp.bfloat16)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 1, tree)
+        out = load_checkpoint(d, 1, tree)
+        donated = jax.jit(lambda t: jax.tree_util.tree_map(
+            lambda x: x * 2, t), donate_argnums=0)(out)
+        np.testing.assert_array_equal(
+            np.asarray(donated["w"]), np.asarray(tree["w"]) * 2)
+
+
 def test_checkpoint_sharded_blobs():
     big = {"w": jnp.ones((1024, 256), jnp.float32)}
     with tempfile.TemporaryDirectory() as d:
