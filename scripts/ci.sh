@@ -116,3 +116,11 @@ XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
     python tests/sharded_checks.py
 python -m benchmarks.bench_sharded --smoke
 python -m benchmarks.run --aggregate-only
+
+# ---- static DP-safety audit: the full clipping x execution x mesh matrix ----
+# Both analyzer passes (jaxpr taint + HLO rules) on every supported config;
+# writes benchmarks/AUDIT.json, exits non-zero on any ERROR finding. The
+# seeded-violation selftest first proves the auditor still has teeth.
+# (the CLI forces its own 8-device count before jax loads)
+python -m repro.launch.audit --selftest
+python -m repro.launch.audit --matrix

@@ -1,0 +1,174 @@
+"""HLO rules engine: named, severity-tagged checks over post-SPMD HLO.
+
+Generalizes the ad-hoc assertions that grew around `analysis.hlo`
+(backward-pass counting in tests/test_bk.py, model-axis norm-collective
+filtering in tests/sharded_checks.py, donation aliasing checked nowhere
+— the PR-7 gap) into one rule catalog with machine-readable findings.
+
+Each rule takes the compiled HLO text plus a `StepExpectation` describing
+what the config CLAIMS (mode, execution, mesh) and returns findings; the
+engine never asserts — `repro.launch.audit` (and CI) decide that any
+ERROR finding fails the run.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.findings import ERROR, INFO, WARNING, Finding
+from repro.analysis.hlo import (backward_passes, classify_collectives,
+                                dynamic_shape_instrs, entry_aliases,
+                                filter_model_norm_rows)
+
+# rule id -> (severity when violated, invariant)
+RULES = {
+    "JAXPR-CLIP-PATH": (
+        ERROR,
+        "every batch-derived dataflow path into a trainable parameter's "
+        "update passes a dp_clip_factor multiply (per-example clipping is "
+        "structurally unskippable)"),
+    "JAXPR-NOISE-ONCE": (
+        ERROR,
+        "exactly one Gaussian noise draw joins each trainable leaf's "
+        "summed clipped gradient before the optimizer consumes it"),
+    "JAXPR-KEY-LINEAGE": (
+        ERROR,
+        "every noise key is folded from a static per-leaf hash and no two "
+        "leaves fold to the same key signature (PR-6 bug class)"),
+    "HLO-COLL-LEAK": (
+        ERROR,
+        "no model-axis collective carries per-example norm data, except "
+        "ghost_flat's single whitelisted flat_norm_psum (paper Sec. 4 "
+        "communication contract)"),
+    "HLO-BWD-COUNT": (
+        ERROR,
+        "the compiled step traverses the layer stack backward exactly once "
+        "under execution=bk (twice under the twopass reference)"),
+    "HLO-DONATION": (
+        ERROR,
+        "every params/opt_state/dp_state leaf is input_output_aliased in "
+        "the entry computation — donation actually took (PR-7 bug class)"),
+    "HLO-SHAPE-STABLE": (
+        ERROR,
+        "no instruction carries a bounded-dynamic (data-dependent) shape; "
+        "compiled programs are traffic-independent"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class StepExpectation:
+    """What the config under audit claims about its compiled step."""
+
+    mode: str                 # base clipping mode (no _twopass suffix)
+    execution: str = "bk"     # bk | twopass
+    sharded: bool = False
+    layer_trip: int | None = None     # scan trip count of the layer stack
+    donated_leaves: int | None = None  # leaves of (params, opt, dp_state)
+    model_axis: str = "model"
+    # model-axis norm collectives whose site contains one of these
+    # substrings are the mode's documented, intentional traffic
+    norm_whitelist: tuple = ("flat_norm_psum",)
+
+
+def _expected_backward(expect: StepExpectation) -> int | None:
+    if expect.mode in ("ghost_flat", "per_group"):
+        return 2 if expect.execution == "twopass" else 1
+    if expect.mode in ("per_layer", "non_private"):
+        return 1
+    return None  # naive_flat: jacrev does not lower to a transposed scan
+
+
+def rule_collective_leak(text: str, expect: StepExpectation, mesh=None
+                         ) -> list[Finding]:
+    if not expect.sharded or mesh is None:
+        return []
+    rows = classify_collectives(text, mesh)
+    norm_rows = filter_model_norm_rows(rows, model_axis=expect.model_axis)
+    allowed = (expect.norm_whitelist if expect.mode == "ghost_flat" else ())
+    findings = []
+    whitelisted = 0
+    for r in norm_rows:
+        if any(w in r["site"] for w in allowed):
+            whitelisted += 1
+            continue
+        findings.append(Finding(
+            "HLO-COLL-LEAK", ERROR,
+            f"{r['kind']} over axes {'+'.join(r['axes'])} carries "
+            f"per-example norm data ({int(r['count'])}x, "
+            f"{int(r['bytes'])} bytes) outside the whitelist",
+            r["site"]))
+    if expect.mode == "ghost_flat" and whitelisted == 0:
+        findings.append(Finding(
+            "HLO-COLL-LEAK", WARNING,
+            "ghost_flat compiled WITHOUT its flat_norm_psum model-axis "
+            "collective — program does not match the claimed structure",
+            "flat_norm_psum"))
+    if not findings:
+        findings.append(Finding(
+            "HLO-COLL-LEAK", INFO,
+            f"{len(norm_rows)} model-axis norm collective site(s), all "
+            f"whitelisted" if norm_rows else
+            "zero model-axis norm collectives", "collectives"))
+    return findings
+
+
+def rule_backward_count(text: str, expect: StepExpectation) -> list[Finding]:
+    if expect.layer_trip is None or expect.layer_trip < 2:
+        return []
+    want = _expected_backward(expect)
+    got = backward_passes(text, expect.layer_trip)
+    if want is None:
+        return [Finding("HLO-BWD-COUNT", INFO,
+                        f"measured {got} transposed layer loops "
+                        f"(no expectation for mode={expect.mode})",
+                        "layer scan")]
+    if got != want:
+        return [Finding(
+            "HLO-BWD-COUNT", ERROR,
+            f"{got} backward layer-stack traversals compiled, expected "
+            f"{want} for mode={expect.mode} execution={expect.execution}",
+            "layer scan")]
+    return [Finding("HLO-BWD-COUNT", INFO,
+                    f"{got} backward traversal(s), as claimed by "
+                    f"execution={expect.execution}", "layer scan")]
+
+
+def rule_donation(text: str, expect: StepExpectation) -> list[Finding]:
+    if expect.donated_leaves is None:
+        return []
+    aliases = entry_aliases(text)
+    aliased_params = {a["param"] for a in aliases}
+    want = expect.donated_leaves
+    if len(aliased_params) >= want:
+        return [Finding("HLO-DONATION", INFO,
+                        f"{len(aliased_params)} entry parameters aliased "
+                        f"(>= {want} state leaves)", "entry")]
+    # donated argnums come first in the flattened entry signature, so the
+    # un-aliased state leaves are the missing low parameter numbers
+    missing = sorted(set(range(want)) - aliased_params)[:8]
+    return [Finding(
+        "HLO-DONATION", ERROR,
+        f"only {len(aliased_params)}/{want} state leaves are "
+        f"input_output_aliased; donation was stripped or ignored "
+        f"(first missing params: {missing})", "entry")]
+
+
+def rule_shape_stability(text: str, expect: StepExpectation) -> list[Finding]:
+    dyn = dynamic_shape_instrs(text)
+    if not dyn:
+        return [Finding("HLO-SHAPE-STABLE", INFO,
+                        "no bounded-dynamic shapes", "module")]
+    return [Finding("HLO-SHAPE-STABLE", ERROR,
+                    f"bounded-dynamic shape {shape}", name)
+            for name, shape in dyn[:8]]
+
+
+def run_hlo_rules(text: str, expect: StepExpectation, mesh=None
+                  ) -> list[Finding]:
+    """All HLO rules over one compiled step. INFO findings record the
+    positive evidence; ERROR findings are the CI failures."""
+    out: list[Finding] = []
+    out.extend(rule_collective_leak(text, expect, mesh))
+    out.extend(rule_backward_count(text, expect))
+    out.extend(rule_donation(text, expect))
+    out.extend(rule_shape_stability(text, expect))
+    return out

@@ -118,9 +118,26 @@ def _grads_only(loss_fn, params, batch, thresholds_tree, trainable_key):
 
 
 def group_clip_factors(norms_sq_groups: jax.Array, c: jax.Array) -> jax.Array:
-    """min(1, C_g / ||g_g^(i)||) with 0-norm safety. (G, B) from (G, B), (G,)."""
-    norm = jnp.sqrt(norms_sq_groups + 1e-12)
-    return jnp.minimum(1.0, c[:, None] / norm)
+    """min(1, C_g / ||g_g^(i)||) with 0-norm safety. (G, B) from (G, B), (G,).
+
+    The `dp_clip_factor` scope marks the factor computation for the static
+    auditor (repro.analysis.jaxpr_taint): per-example norms are CONSUMED
+    here and what leaves is a bounded scaling factor."""
+    with jax.named_scope("dp_clip_factor"):
+        norm = jnp.sqrt(norms_sq_groups + 1e-12)
+        return jnp.minimum(1.0, c[:, None] / norm)
+
+
+def flat_clip_factors(total_norms_sq: jax.Array,
+                      c: float | jax.Array) -> jax.Array:
+    """min(1, C / ||g^(i)||): the flat-clipping per-example factor, (B,).
+
+    Single marked implementation shared by ghost_flat, naive_flat and both
+    sharded drivers — the `dp_clip_factor` scope is the auditor's anchor,
+    so factor math must not be re-derived inline at call sites."""
+    with jax.named_scope("dp_clip_factor"):
+        c = jnp.asarray(c, jnp.float32)
+        return jnp.minimum(1.0, c / jnp.sqrt(total_norms_sq + 1e-12))
 
 
 def _bk_capture_ok(layout: GroupLayout, trainable_key: str | None) -> bool:
@@ -225,8 +242,7 @@ def dp_clipped_gradients(
                                       batch_size, inf_tree, trainable_key,
                                       execution)
         total = jnp.sum(norms, axis=0)  # (B,)
-        c = jnp.asarray(flat_threshold, jnp.float32)
-        f = jnp.minimum(1.0, c / jnp.sqrt(total + 1e-12))  # (B,)
+        f = flat_clip_factors(total, flat_threshold)  # (B,)
         if cap is not None:  # BK epilogue: contract the cached residuals
             residuals, recipes = cap
             f_rows = jnp.broadcast_to(f[None], (layout.num_groups,
@@ -278,8 +294,7 @@ def dp_clipped_gradients(
     # parity tests can compare every mode against this oracle
     norms = _naive_group_norms(layout, jac, batch_size)
     total = jnp.sum(norms, axis=0)  # (B,)
-    c = jnp.asarray(flat_threshold, jnp.float32)
-    f = jnp.minimum(1.0, c / jnp.sqrt(total + 1e-12))
+    f = flat_clip_factors(total, flat_threshold)
     grads = jax.tree_util.tree_map(
         lambda l: jnp.tensordot(f.astype(jnp.float32),
                                 l.astype(jnp.float32).reshape(batch_size, -1),
@@ -401,7 +416,7 @@ def sharded_clipped_gradients(
         # norm² crosses every model shard before any factor exists
         with jax.named_scope("flat_norm_psum"):
             total = jax.lax.psum(partial, model_axis)  # (B_local,)
-        f = jnp.minimum(1.0, c / jnp.sqrt(total + 1e-12))
+        f = flat_clip_factors(total, c)
         f_rows = f[None, :] * own[:, None]  # masked: epilogue is per-owner
         with jax.named_scope("clip_count_psum"):
             counts = jax.lax.psum(
@@ -413,7 +428,7 @@ def sharded_clipped_gradients(
             raise ValueError("per_group mode needs group_thresholds (M,)")
         num_super = group_thresholds.shape[0]
         c_m = group_thresholds[midx]
-        f_m = jnp.minimum(1.0, c_m / jnp.sqrt(partial + 1e-12))  # (B_local,)
+        f_m = flat_clip_factors(partial, c_m)  # (B_local,)
         f_rows = f_m[None, :] * own[:, None]
         with jax.named_scope("clip_count_psum"):
             slot = (jnp.arange(num_super) == midx).astype(jnp.float32)

@@ -187,29 +187,36 @@ def add_noise_to_grads(
     """grads + N(0, std_k²) with the right std per (possibly stacked/blocked)
     parameter leaf. `stds` is indexed by layout-group flat id."""
 
+    def one_leaf(node, g, path):
+        gname = layout._leaf_group[path]
+        grp = layout.group(gname)
+        piece = jax.lax.dynamic_slice_in_dim(stds, grp.offset, grp.count)
+        piece = piece.reshape(grp.stack_shape or ())
+        leaf_key = jax.random.fold_in(
+            key, stable_hash("/".join(path)))
+        z = jax.random.normal(leaf_key, g.shape, dtype)
+        if node.blocks > 1:
+            # std varies per column block of the last axis
+            m = node.blocks
+            rest = g.shape[node.stack:-1]
+            std_full = piece.reshape(
+                grp.stack_shape[:-1] + (1,) * len(rest) + (m, 1))
+            zb = z.reshape(g.shape[:-1] + (m, g.shape[-1] // m))
+            zb = zb * std_full
+            z = zb.reshape(g.shape)
+        else:
+            std_full = piece.reshape(
+                (grp.stack_shape or ()) + (1,) * (g.ndim - len(grp.stack_shape)))
+            z = z * std_full
+        return (g.astype(dtype) + z).astype(g.dtype)
+
     def walk(node, g, path):
         if isinstance(node, P):
-            gname = layout._leaf_group[path]
-            grp = layout.group(gname)
-            piece = jax.lax.dynamic_slice_in_dim(stds, grp.offset, grp.count)
-            piece = piece.reshape(grp.stack_shape or ())
-            leaf_key = jax.random.fold_in(
-                key, stable_hash("/".join(path)))
-            z = jax.random.normal(leaf_key, g.shape, dtype)
-            if node.blocks > 1:
-                # std varies per column block of the last axis
-                m = node.blocks
-                rest = g.shape[node.stack:-1]
-                std_full = piece.reshape(
-                    grp.stack_shape[:-1] + (1,) * len(rest) + (m, 1))
-                zb = z.reshape(g.shape[:-1] + (m, g.shape[-1] // m))
-                zb = zb * std_full
-                z = zb.reshape(g.shape)
-            else:
-                std_full = piece.reshape(
-                    (grp.stack_shape or ()) + (1,) * (g.ndim - len(grp.stack_shape)))
-                z = z * std_full
-            return (g.astype(dtype) + z).astype(g.dtype)
+            # dp_noise_add:<leaf> marks this leaf's (single) draw for the
+            # static auditor (repro.analysis.jaxpr_taint); '.'-joined so
+            # the leaf name stays one name-stack segment
+            with jax.named_scope("dp_noise_add:" + ".".join(path)):
+                return one_leaf(node, g, path)
         return {k2: walk(node[k2], g[k2], path + (k2,)) for k2 in node}
 
     return walk(spec, grads, ())
@@ -313,6 +320,12 @@ def make_dp_train_step(
     launch.sharding params_shardings as in_shardings to keep the weights
     STORED model-sharded between steps).
     """
+    if cfg.private:
+        # static PRNG-safety gate (see noise.check_leaf_key_collisions):
+        # two leaf paths crc32-folding to the same key would draw
+        # IDENTICAL noise — refuse at plan-build time, naming both
+        noise_lib.check_leaf_key_collisions(
+            ["/".join(p) for p, _ in _walk(spec)])
     if mesh is not None:
         return _make_sharded_step(loss_fn, spec, layout, optimizer, cfg,
                                   batch_size=batch_size,

@@ -84,11 +84,14 @@ def clip_factor(c: jax.Array, norms_sq: jax.Array) -> jax.Array:
         c == +inf -> 1                     (no clipping)
         c < 0     -> |c|                   (direct scale, two-pass modes)
     """
-    c = c.astype(jnp.float32)
-    n = norms_sq.astype(jnp.float32)
-    clipped = jnp.minimum(1.0, c * jax.lax.rsqrt(n + _EPS))
-    factor = jnp.where(jnp.isinf(c), 1.0, clipped)
-    return jnp.where(c < 0, -c, factor)
+    # dp_clip_factor: the static auditor's anchor (repro.analysis) — norm
+    # data is consumed here; what leaves is a bounded scaling factor
+    with jax.named_scope("dp_clip_factor"):
+        c = c.astype(jnp.float32)
+        n = norms_sq.astype(jnp.float32)
+        clipped = jnp.minimum(1.0, c * jax.lax.rsqrt(n + _EPS))
+        factor = jnp.where(jnp.isinf(c), 1.0, clipped)
+        return jnp.where(c < 0, -c, factor)
 
 
 def linear_norms_sq(a: jax.Array, g: jax.Array, *,

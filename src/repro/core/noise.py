@@ -77,17 +77,56 @@ def total_noise_sq_norm(
     return jnp.sum(jnp.asarray(dims, jnp.float32) * stds**2)
 
 
-def _leaf_key(base_key: jax.Array, path: tuple) -> jax.Array:
-    """Deterministic per-leaf key: fold the leaf path hash into the base key."""
-    h = 0
+def _path_names(path: tuple) -> tuple[str, ...]:
+    names = []
     for entry in path:
         name = getattr(entry, "key", None)
         if name is None:
             name = getattr(entry, "idx", None)
         if name is None:
             name = getattr(entry, "name", str(entry))
-        h = (h * 1000003 + stable_hash(str(name))) & 0x7FFFFFFF
-    return jax.random.fold_in(base_key, h)
+        names.append(str(name))
+    return tuple(names)
+
+
+def _leaf_key_hash(path: tuple) -> int:
+    """31-bit fold constant for one leaf path (polynomial over crc32 of
+    the path segments). Exposed separately from `_leaf_key` so collision
+    detection can check the HASHES without touching jax."""
+    h = 0
+    for name in _path_names(path):
+        h = (h * 1000003 + stable_hash(name)) & 0x7FFFFFFF
+    return h
+
+
+def _leaf_key(base_key: jax.Array, path: tuple) -> jax.Array:
+    """Deterministic per-leaf key: fold the leaf path hash into the base key."""
+    return jax.random.fold_in(base_key, _leaf_key_hash(path))
+
+
+def check_leaf_key_collisions(paths: list[str],
+                              hash_fn: Callable[[str], int] = stable_hash
+                              ) -> dict[int, str]:
+    """Raise if two distinct leaf paths fold to the SAME 31-bit key hash.
+
+    Colliding paths would receive IDENTICAL noise draws — correlated noise
+    breaks the Gaussian mechanism's sensitivity bound silently (the draw
+    still looks Gaussian per leaf). crc32 over ~30-40 leaf names makes a
+    collision unlikely but not impossible (birthday bound ~2^15.5 names),
+    so every plan build checks statically and refuses to train on one.
+    Returns the (hash -> path) table for reuse/inspection."""
+    seen: dict[int, str] = {}
+    for path in paths:
+        h = hash_fn(path)
+        other = seen.get(h)
+        if other is not None and other != path:
+            raise ValueError(
+                f"PRNG leaf-key collision: parameter paths {other!r} and "
+                f"{path!r} both fold to key hash {h} — their noise draws "
+                f"would be identical (correlated noise voids the DP "
+                f"guarantee). Rename one of the parameters.")
+        seen[h] = path
+    return seen
 
 
 def add_gaussian_noise(
@@ -112,10 +151,25 @@ def add_gaussian_noise(
         gids = jax.tree_util.tree_leaves(group_of_leaf)
         if len(gids) != len(paths_leaves):
             raise ValueError("group pytree structure mismatch")
+    check_leaf_key_collisions(
+        ["/".join(_path_names(p)) for p, _ in paths_leaves],
+        hash_fn=lambda s: _leaf_key_hash_str(s))
     noised = []
     for (path, leaf), gid in zip(paths_leaves, gids):
-        k = _leaf_key(key, path)
-        std = stds[gid]
-        z = std * jax.random.normal(k, leaf.shape, dtype=jnp.float32)
-        noised.append((leaf.astype(jnp.float32) + z).astype(leaf.dtype))
+        # dp_noise_add:<leaf> marks the draw for the static auditor
+        # (repro.analysis.jaxpr_taint): '.'-joined so the leaf name stays
+        # one name-stack segment
+        with jax.named_scope("dp_noise_add:" + ".".join(_path_names(path))):
+            k = _leaf_key(key, path)
+            std = stds[gid]
+            z = std * jax.random.normal(k, leaf.shape, dtype=jnp.float32)
+            noised.append((leaf.astype(jnp.float32) + z).astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, noised)
+
+
+def _leaf_key_hash_str(path_str: str) -> int:
+    """`_leaf_key_hash` over a '/'-joined rendered path string."""
+    h = 0
+    for name in path_str.split("/"):
+        h = (h * 1000003 + stable_hash(name)) & 0x7FFFFFFF
+    return h

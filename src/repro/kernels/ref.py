@@ -101,3 +101,16 @@ def fused_norm_clip_ref(a: jnp.ndarray, g: jnp.ndarray, c: jnp.ndarray,
     total = n if extra_norms_sq is None else n + extra_norms_sq
     f = clip_factor(c, total)
     return n, clip_reduce_ref(a, g, f)
+
+
+# Registry-op -> oracle. Every op the autotuner measures (autotune.OPS)
+# must have a pure-jnp ground truth here AND a parity test exercising it;
+# tests/test_kernel_registry.py enforces the bijection so a new kernel
+# cannot land without its oracle.
+ORACLES = {
+    "norms": ghost_norm_ref,
+    "clip_sum": clip_reduce_ref,
+    "linear_clip": fused_norm_clip_ref,
+    "scale_contract": scale_contract_ref,
+    "paged_attn": paged_attn_ref,
+}

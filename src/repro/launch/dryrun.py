@@ -265,6 +265,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             ghost_outer_cap: int | None = None,
             moe_dispatch: str | None = None,
             sharded: bool = False,
+            audit: bool = False,
             tag: str = "") -> dict:
     shape = _shape_for(shape_name, debug)
     if shape_name == "long_500k" and arch not in LONG_OK:
@@ -336,6 +337,19 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
         trip = _layer_trip(cfg)
         bw_passes = (backward_passes(hlo, trip)
                      if kind == "train" and trip >= 2 else None)
+        audit_d = None
+        if audit and kind == "train":
+            from repro.analysis.findings import errors
+            from repro.analysis.rules import StepExpectation, run_hlo_rules
+            from repro.core.clipping import base_mode
+            # donated_leaves=None: the dry-run varies donation with cache
+            # settings; full donation coverage is audited by launch.audit
+            expect = StepExpectation(
+                mode=base_mode(clipping), execution=execution,
+                sharded=sharded, layer_trip=trip, donated_leaves=None)
+            fs = run_hlo_rules(hlo, expect, mesh if sharded else None)
+            audit_d = {"findings": [f.to_dict() for f in fs],
+                       "num_errors": len(errors(fs))}
         axis_coll = None
         if sharded and kind == "train":
             from repro.launch.hlo_analysis import (classify_collectives,
@@ -354,6 +368,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             "sharded": sharded if kind == "train" else None,
             "backward_passes": bw_passes,
             "collectives_by_axis": axis_coll,
+            "audit": audit_d,
             "status": "ok",
             "num_params": model.num_params,
             "num_groups": model.layout.num_groups,
@@ -410,6 +425,10 @@ def main() -> int:
                          "clipping engine) instead of the GSPMD jit; "
                          "results gain a per-mesh-axis collective "
                          "breakdown (collectives_by_axis)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the static DP-safety HLO rules "
+                         "(repro.analysis.rules) on each compiled train "
+                         "step; any ERROR finding fails the run")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     ap.add_argument("--cache", default="off", choices=["on", "off"],
@@ -455,8 +474,15 @@ def main() -> int:
         r = run_one(a, s, mk, clipping=args.clipping,
                     execution=args.execution,
                     microbatches=args.microbatches, save=not debug,
-                    debug=debug, sharded=args.sharded)
-        if r["status"] == "ok":
+                    debug=debug, sharded=args.sharded, audit=args.audit)
+        if r["status"] == "ok" and (r.get("audit") or {}).get("num_errors"):
+            failures += 1
+            bad = [f for f in r["audit"]["findings"]
+                   if f["severity"] == "ERROR"]
+            print(f"[FAIL] {a:22s} {s:12s} {mk:6s} audit: "
+                  + "; ".join(f"{f['rule']}: {f['message']}" for f in bad),
+                  flush=True)
+        elif r["status"] == "ok":
             gb = r["memory"].get("temp_size_in_bytes", 0) / 2**30
             print(f"[ok]   {a:22s} {s:12s} {mk:6s} "
                   f"flops={r['flops']:.3e} temp={gb:.2f}GiB "

@@ -1,0 +1,54 @@
+"""Kernel-registry completeness: every autotuned op has an oracle + test.
+
+The registry contract (ISSUE 9 satellite): each op in
+`kernels.autotune.OPS` must have (a) a pure-jnp ground truth in
+`kernels.ref.ORACLES`, (b) a parity test somewhere under tests/ that
+calls that oracle by name, and (c) a dispatch site in
+`kernels/backend.py`. A new kernel cannot land half-wired.
+"""
+import inspect
+import os
+
+from repro.kernels import autotune, backend, ref
+
+TESTS_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _tests_source() -> str:
+    chunks = []
+    for fn in sorted(os.listdir(TESTS_DIR)):
+        if fn.endswith(".py") and fn != os.path.basename(__file__):
+            with open(os.path.join(TESTS_DIR, fn)) as fh:
+                chunks.append(fh.read())
+    return "\n".join(chunks)
+
+
+def test_ops_oracles_bijection():
+    assert set(autotune.OPS) == set(ref.ORACLES), (
+        f"autotune.OPS {sorted(autotune.OPS)} and ref.ORACLES "
+        f"{sorted(ref.ORACLES)} must list the same ops")
+
+
+def test_every_oracle_is_a_ref_function():
+    for op, fn in ref.ORACLES.items():
+        assert callable(fn), op
+        assert fn.__module__ == "repro.kernels.ref", (
+            f"{op}: oracle must live in kernels/ref.py, "
+            f"got {fn.__module__}")
+
+
+def test_every_oracle_has_a_parity_test():
+    src = _tests_source()
+    for op, fn in ref.ORACLES.items():
+        assert fn.__name__ in src, (
+            f"op {op!r}: no test under tests/ references its oracle "
+            f"{fn.__name__!r} — add a parity test before registering "
+            f"the kernel")
+
+
+def test_every_op_is_dispatched_by_backend():
+    src = inspect.getsource(backend)
+    for op in autotune.OPS:
+        assert f'"{op}"' in src or f"'{op}'" in src, (
+            f"op {op!r} is autotuned but never dispatched in "
+            f"kernels/backend.py")

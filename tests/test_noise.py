@@ -72,3 +72,70 @@ def test_add_gaussian_noise_stat():
     sb = float(jnp.std(out["b"]["w"]))
     assert abs(sa - 2.0) < 0.1
     assert abs(sb - 0.5) < 0.1
+
+
+# ---------------------------------------------------------------------------
+# PRNG leaf-key collision gate (ISSUE 9 satellite): two parameter paths
+# folding to the same 31-bit key hash would draw IDENTICAL noise, which
+# silently voids the Gaussian mechanism. The pair below is a REAL crc32
+# collision (found by search): stable_hash('brjcykot') ==
+# stable_hash('nbpitdgr'), so both the '/'-joined plan-build hash and the
+# per-segment polynomial used for fold constants collide.
+# ---------------------------------------------------------------------------
+
+_COLLIDING = ("g/brjcykot/w", "g/nbpitdgr/w")
+
+
+def test_collision_pair_is_real():
+    from repro.core.spec import stable_hash
+    assert stable_hash("brjcykot") == stable_hash("nbpitdgr") == 475959702
+    a, b = _COLLIDING
+    assert stable_hash(a) == stable_hash(b) == 1816530066
+    assert N._leaf_key_hash_str(a) == N._leaf_key_hash_str(b)
+    # control: the gate is not trigger-happy on ordinary distinct names
+    assert stable_hash("g/attn/w") != stable_hash("g/mlp/w")
+
+
+def test_check_leaf_key_collisions_names_both_paths():
+    import pytest
+    with pytest.raises(ValueError) as exc:
+        N.check_leaf_key_collisions(list(_COLLIDING))
+    msg = str(exc.value)
+    assert _COLLIDING[0] in msg and _COLLIDING[1] in msg
+    assert "collision" in msg
+    # the same path twice is dedup, not a collision
+    table = N.check_leaf_key_collisions(["g/attn/w", "g/attn/w", "g/mlp/w"])
+    assert len(table) == 2
+
+
+def test_add_gaussian_noise_rejects_colliding_leaves():
+    import pytest
+    grads = {"g": {"brjcykot": {"w": jnp.zeros((4,))},
+                   "nbpitdgr": {"w": jnp.zeros((4,))}}}
+    gids = {"g": {"brjcykot": {"w": 0}, "nbpitdgr": {"w": 0}}}
+    with pytest.raises(ValueError, match="collision"):
+        N.add_gaussian_noise(grads, gids, jnp.ones((1,)),
+                             jax.random.PRNGKey(0))
+
+
+def test_plan_build_rejects_colliding_spec():
+    import pytest
+
+    from repro import optim
+    from repro.core.dp_sgd import DPConfig, make_dp_train_step
+    from repro.core.spec import GroupLayout, P
+
+    spec = {"g": {"brjcykot": {"w": P((4, 4))},
+                  "nbpitdgr": {"w": P((4, 4))}}}
+    layout = GroupLayout(spec)
+    loss = lambda params, batch: 0.0  # noqa: E731 - never traced: gate fires first
+    with pytest.raises(ValueError) as exc:
+        make_dp_train_step(loss, spec, layout, optim.adam(1e-3),
+                           DPConfig(mode="per_layer", sigma=1.0),
+                           batch_size=8)
+    assert "g/brjcykot/w" in str(exc.value)
+    assert "g/nbpitdgr/w" in str(exc.value)
+    # non-private training never draws noise: the gate must not block it
+    make_dp_train_step(loss, spec, layout, optim.adam(1e-3),
+                       DPConfig(mode="non_private", epsilon=None,
+                                adaptive=False), batch_size=8)

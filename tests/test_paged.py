@@ -172,6 +172,11 @@ def test_paged_attn_backend_parity(b, kv, g, dq, dv, n, L, P):
     ker = pls.paged_attn(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
     np.testing.assert_allclose(np.asarray(ker), np.asarray(ref),
                                rtol=1e-4, atol=1e-6)
+    # the registry oracle (kernels.ref.paged_attn_ref) IS the xla path;
+    # pin that identity so the oracle stays the allclose ground truth
+    from repro.kernels.ref import paged_attn_ref
+    oracle = paged_attn_ref(q, kpool, vpool, pt, pos, scale=scale, dv=dv)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(oracle))
 
 
 def test_paged_impl_auto_routing():
