@@ -33,6 +33,22 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
         --slots 2 --prompt-len 24 --min-prompt-len 24 --gen 16 \
         --paging on --page-len 8 --num-pages 12
+
+# ---- multi-tenant smoke: two tenants on one engine through the CLI (no
+# adapter dirs -> both serve the base model; mixed-pool parity, hot-swap
+# bitwise verification, and zero-recompile asserts run in tier-1 via
+# tests/test_engine.py / tests/test_swap.py; the end-to-end train ->
+# publish -> swap loop is examples/multi_tenant_serve.py).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.launch.serve --arch tiny --mode engine --batch 4 \
+        --slots 3 --prompt-len 12 --min-prompt-len 3 --gen 16 \
+        --tenants 2 --lora-rank 4
+
+# ---- doc drift: CLI flags <-> docs, link targets, the generated
+# engine-stats table (also part of tier-1; re-run here standalone so a
+# docs-only change failing CI names this stage, not the whole suite).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -q tests/test_docs.py
 cd scripts
 
 # ---- crash-safe service smoke: the REAL kill -9 variant of the fault

@@ -298,6 +298,27 @@ def load_checkpoint(directory: str, step: int, template, *, shardings=None,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def leaf_crc32(leaf) -> int:
+    """crc32 over the exact raw bytes `save_checkpoint` checksums for a
+    leaf (bfloat16 via its uint16 view, anything else via plain tobytes).
+    Lets live state be compared bitwise against a manifest without
+    re-serializing a checkpoint — the multi-tenant engine's hot-swap
+    verification (`DecodeEngine.adapter_crcs` vs `manifest_crcs`)."""
+    arr = np.asarray(jax.device_get(leaf))
+    if arr.dtype == jnp.bfloat16:
+        return zlib.crc32(arr.view(np.uint16).tobytes())
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def manifest_crcs(directory: str, step: int) -> list[int] | None:
+    """Per-leaf crc32 list of a step's manifest (flatten order), or None
+    when the checkpoint predates checksums."""
+    leaves = load_manifest(directory, step)["leaves"]
+    if any("crc32" not in m for m in leaves):
+        return None
+    return [m["crc32"] for m in leaves]
+
+
 def latest_step(directory: str) -> int | None:
     if not os.path.isdir(directory):
         return None

@@ -27,7 +27,42 @@ from repro.core.spec import GroupLayout, P, SpecTree, _walk, stable_hash
 
 @dataclasses.dataclass(frozen=True)
 class DPConfig:
-    """Configuration of the private learning run."""
+    """Configuration of the private learning run.
+
+    Knob groups, with defaults and units (CLI spellings in parens refer
+    to `repro.launch.train` / `repro.launch.service` flags):
+
+    * **Clipping** — `mode` (`--clipping`, default `per_layer`) picks
+      the paper's clipping granularity; `execution` (`--execution`,
+      default `bk`) picks how the flat/group modes compute the clipped
+      sums (one backprop + BK epilogue vs the two-backward reference).
+      Accounting is identical across executions — the choice is purely
+      compute/memory.
+    * **Privacy budget** — `epsilon` (target, calibrated over `steps`
+      optimizer steps at Poisson `sampling_rate` = B/N and `delta`);
+      set `sigma` (noise multiplier, units of the clipping threshold)
+      to skip calibration entirely. All python floats, resolved once at
+      plan-build time.
+    * **Thresholds** — `adaptive=True` tracks the `target_quantile` of
+      per-example norms with learning rate `quantile_lr`, spending
+      `quantile_budget_fraction` of the budget on the clip-count
+      release (Prop 3.1 split); `init_threshold` is C(0) in gradient-
+      norm units (also the fixed C when `adaptive=False`).
+    * **per_group** — `group_assignment` maps each `GroupLayout` group
+      to a supergroup; `num_supergroups` pads the count (the sharded
+      engine sets it to the `--mesh` model-axis size so every shard
+      owns a well-defined threshold slot).
+    * **Ghost-op backend** — `backend` (`--backend`, default `auto`)
+      and `autotune` (`--autotune`, default on) select the kernel
+      engine for norms/clipped-sums; scoped around the step so jitted
+      traces capture it statically. See `repro.kernels.backend`.
+    * **Scale-out** — `microbatches` (default 1) accumulates gradients
+      without changing the released quantity (clipping commutes with
+      accumulation); `batch_axes` names the mesh axes of the batch dim,
+      required when `microbatches > 1` under pjit (pins the microbatch
+      split off the data plane). The `--mesh` itself is passed to
+      `make_dp_train_step(mesh=...)`, not stored here.
+    """
 
     mode: str = "per_layer"  # non_private|per_layer|ghost_flat|per_group|
     #   naive_flat (+ ghost_flat_twopass|per_group_twopass reference modes)
@@ -303,11 +338,28 @@ def make_dp_train_step(
     trainable_key: str | None = None,
     mesh: Any = None,
 ) -> tuple[Callable, Callable, DPPlan]:
-    """Returns (init_fn, step_fn, plan).
+    """Build the jittable private training step. Returns
+    (init_fn, step_fn, plan).
 
     init_fn(params) -> (opt_state, dp_state)
     step_fn(params, opt_state, dp_state, batch, key)
         -> (params, opt_state, dp_state, StepMetrics)
+
+    All accounting (sigma calibration, the Prop 3.1 quantile budget
+    split, group dimensioning) happens HERE, once, in python floats —
+    the returned `plan` records it and step_fn is pure. Refuses at
+    build time to train a spec whose leaf paths crc32-collide into the
+    same noise key.
+
+    batch_size: the GLOBAL examples-per-step B (even under `mesh`),
+    used for averaging and the sampling-rate check; must divide by
+    `cfg.microbatches`.
+
+    trainable_key: restrict training to `params[trainable_key]` (e.g.
+    `"lora"` for DP-LoRA fine-tunes — the rest of the tree is frozen,
+    carried through untouched, and spends no privacy budget). The
+    training service publishes adapter-only checkpoints exactly when
+    this is `"lora"`.
 
     mesh: a (data[, pod], model) device mesh. When given, step_fn is built
     under `shard_map` — batch sharded over the data plane, clipping

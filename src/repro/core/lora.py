@@ -16,6 +16,14 @@ Per-example grad norms for LoRA factorize nicely:
     dA_i = X_i^T (G_i B^T)         (d_in x r)
 Both are computed with the standard linear ghost identity using the low-rank
 intermediate, so costs stay O(T² r) / O(T r (d_in + d_out)).
+
+Serving side (multi-tenant): one base model, many privately fine-tuned
+adapters. `stacked_lora_delta` is the inference-only variant of
+`dp_lora_linear`'s adapter term over a tenant-stacked buffer — adapters
+for every live tenant stored along one extra axis, a per-row int32 tenant
+id gathering the right pair inside the compiled program, so admitting or
+hot-swapping a tenant is a buffer write, never a retrace
+(launch.engine.DecodeEngine, launch.swap).
 """
 from __future__ import annotations
 
@@ -89,3 +97,78 @@ def merge_lora(w, a, b, alpha: float):
     """Fold a trained adapter into the frozen weight (serving path)."""
     r = a.shape[-1]
     return w + (a @ b) * (alpha / r)
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant serving: tenant-stacked adapters.
+# ---------------------------------------------------------------------------
+
+
+def stacked_lora_delta(x, a_stack, b_stack, tenant, alpha):
+    """Per-row adapter term from a tenant-stacked buffer (serving path).
+
+    The batched multi-LoRA matmul of the multi-tenant engine: every live
+    tenant's adapter pair lives in one stacked buffer, and each batch row
+    gathers its own pair by int32 tenant id — the gather indices are DATA,
+    so onboarding a tenant or hot-swapping its adapter never changes the
+    traced program.
+
+      x:       (B, t, d_in) activations (t = 1 at decode).
+      a_stack: (T, d_in, r) — tenant axis leading.
+      b_stack: (T, r, d_out).
+      tenant:  (B,) int32 adapter-slot index per row.
+
+    Returns (B, t, d_out): `(x @ A[tenant]) @ B[tenant] * (alpha / r)` —
+    row-independent (each row contracts only its own adapter), which is
+    what makes a mixed-tenant pool step bitwise identical to serving each
+    tenant alone (tests/test_engine.py asserts it).
+    """
+    a = jnp.take(a_stack, tenant, axis=0)  # (B, d_in, r)
+    b = jnp.take(b_stack, tenant, axis=0)  # (B, r, d_out)
+    r = a_stack.shape[-1]
+    h = jnp.einsum("btd,bdr->btr", x, a)
+    return jnp.einsum("btr,bro->bto", h, b) * (alpha / r)
+
+
+def stacked_adapter_zeros(spec_tree, num_slots: int):
+    """Zero tenant-stacked buffers for an adapter P-spec tree.
+
+    Every adapter leaf P(shape=(n, ...)) (n = layer-scan stack) becomes a
+    zeros array of shape (n, T, ...) with T = `num_slots` riding just
+    inside the scan axis (lax.scan consumes the leading layer axis; the
+    per-layer slice handed to the attention body is then (T, ...), i.e.
+    tenant-leading as `stacked_lora_delta` expects). B-adapters init to
+    zeros anyway, so an empty slot serves the exact base model.
+    """
+    def leaf(p):
+        return jnp.zeros((p.shape[0], num_slots) + tuple(p.shape[1:]),
+                         p.dtype)
+
+    return jax.tree_util.tree_map(leaf, spec_tree,
+                                  is_leaf=lambda v: isinstance(v, P))
+
+
+def stacked_slot_update(stacked, slot: int, adapters):
+    """Install one tenant's adapter tree into slot `slot` of a stacked
+    buffer (the hot-swap write: pure data, zero retrace). `adapters` leaves
+    must be (n, ...) matching the buffer's (n, T, ...) minus the tenant
+    axis; None writes zeros (the base model). Returns the updated buffer
+    pytree."""
+    if adapters is None:
+        def put(buf):
+            return buf.at[:, slot].set(jnp.zeros(
+                buf.shape[:1] + buf.shape[2:], buf.dtype))
+
+        return jax.tree_util.tree_map(put, stacked)
+
+    def put(buf, leaf):
+        want = buf.shape[:1] + buf.shape[2:]
+        got = tuple(jnp.shape(leaf))
+        if got != want:
+            raise ValueError(
+                f"adapter leaf shape {got} does not match the stacked "
+                f"buffer's per-tenant shape {want}")
+        return buf.at[:, slot].set(
+            jax.device_put(jnp.asarray(leaf, buf.dtype)))
+
+    return jax.tree_util.tree_map(put, stacked, adapters)

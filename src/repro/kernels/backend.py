@@ -88,7 +88,40 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Static (trace-time) engine configuration."""
+    """Static (trace-time) engine configuration.
+
+    Jitted programs capture the active config at trace time via
+    `backend.scoped(...)`; nothing here is a runtime value. Knobs:
+
+    * `backend` (default `"xla"`; `--backend` on the CLIs, `auto` from
+      `DPConfig`): `xla` einsum/gram reference paths, `pallas` TPU
+      kernels (interpret-mode off TPU — correctness only), `auto`
+      measured-table argmin then static cost model.
+    * `outer_max_elems` / `gram_chunk`: xla path policy — max din·dout
+      elements for the outer-product norms path, and the gram-matrix
+      chunk size (elements along B·T). `None` inherits the
+      `repro.core.ghost` module defaults.
+    * `bt`, `dk`, `bi`, `bj`: pallas tile sizes (rows of the sequence,
+      feature-chunk, din and dout tiles respectively; units = array
+      elements). Defaults suit ~16 MB VMEM cores; the autotune sweep
+      measures alternatives.
+    * `interpret` (default `None` = interpret off-TPU, compiled on
+      TPU): force pallas interpret mode either way.
+    * `vmem_limit_bytes` (default 12 MiB): kernel-selection guard —
+      `auto` rejects a pallas candidate whose working set exceeds it.
+    * `prefer_fused` (default True): allow the single-pallas_call fused
+      norm+clip kernel; scoped off by the two-pass drivers so the
+      norms-only pass can dead-code-eliminate the unused contraction.
+    * `autotune` (default True; `--autotune off` to disable): let
+      measured (op, shape-bucket) entries from the installed table
+      override the static model, on any jax backend.
+    * `capture_residuals` (default False): BK capture pass marker —
+      scoped on by `bk.capture_clipped` ONLY; primitives refuse
+      BkChannels outside it (a capture pass returns zero param
+      cotangents and must never be mistaken for a gradient pass).
+      Interacts with `--execution bk`: the norm backprop runs under
+      this scope, the epilogue (`scale_contract`) outside it.
+    """
 
     backend: str = "xla"
     # xla path policy; None -> fall through to the repro.core.ghost module

@@ -293,7 +293,8 @@ def run_matrix(*, arch: str = "tiny", out_path: str | None = None,
     return report
 
 
-def main() -> int:
+def build_audit_parser() -> argparse.ArgumentParser:
+    """CLI surface (tests/test_docs.py introspects this for doc drift)."""
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--matrix", action="store_true",
                     help="run the full clipping x execution x mesh matrix "
@@ -309,7 +310,11 @@ def main() -> int:
                          "exactly its expected rule")
     ap.add_argument("--out", default=AUDIT_PATH,
                     help="AUDIT.json path (default: benchmarks/AUDIT.json)")
-    args = ap.parse_args()
+    return ap
+
+
+def main() -> int:
+    args = build_audit_parser().parse_args()
 
     rc = 0
     if args.selftest:

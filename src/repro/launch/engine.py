@@ -65,6 +65,42 @@ bit-frozen and each live slot's math is row-independent.
     rid = engine.submit(prompt_tokens, max_new_tokens=32)
     ...                          # submit more any time, even mid-flight
     done = engine.run()          # {rid: Completion}
+
+Multi-tenant serving (`max_tenants=`): one base model, many privately
+fine-tuned LoRA adapters (the paper's Sec 5.3 recipe productionized).
+Adapters for every live tenant live in ONE tenant-stacked device buffer
+(core.lora.stacked_adapter_zeros); each pool slot carries an int32
+adapter-slot id, and the pool-wide decode applies every row's own
+adapter as one batched multi-LoRA gather/einsum inside the compiled
+program (core.lora.stacked_lora_delta). The tenant ids and the stacked
+buffer are DATA — onboarding a tenant, hot-swapping an adapter
+(`update_adapter`, the target of launch.swap's checkpoint watcher) and
+retiring a tenant are buffer/host-table writes that NEVER retrace the
+three programs (`trace_counts` lets callers assert this).
+
+Tenant lifecycle mirrors the slot pool's own discipline:
+
+  * `add_tenant` fills a free adapter slot; when all `max_tenants` slots
+    are held, the tenant WAITS (FIFO, same deferral semantics as paged
+    admission) and its requests hold the queue until a slot frees.
+  * `update_adapter` is a blue/green swap: with in-flight requests on
+    the old version, the new version lands in a spare adapter slot and
+    only NEW admissions route to it — the old slot drains (in-flight
+    requests keep their version to the last token) and frees on the
+    last retirement. With no spare slot (or no in-flight use) the write
+    is in-place.
+  * `remove_tenant` refuses new submits, drains the tenant's queued and
+    in-flight requests, then recycles its adapter slot to the waiters.
+
+Paged-plane prefix sharing is namespaced by (tenant, adapter version):
+KV bytes depend on the adapter, so prefixes never cross tenants or
+survive a swap.
+
+    eng = DecodeEngine(model, params, num_slots=8, cache_len=128,
+                       max_tenants=4)
+    alice = eng.add_tenant(adapter_tree, name="alice")
+    rid = eng.submit(prompt_tokens, max_new_tokens=32, tenant=alice)
+    eng.update_adapter(alice, new_tree)   # hot swap, zero retrace
 """
 from __future__ import annotations
 
@@ -91,11 +127,69 @@ class Completion:
 class DecodeEngine:
     """Slot-pool continuous-batching greedy decoder (see module doc)."""
 
+    # Every counter in `engine.stats`, with its meaning. The engine-stats
+    # table in docs/serving.md is GENERATED from this mapping and
+    # tests/test_docs.py asserts the two stay identical, so the docs
+    # cannot rot when a counter is added or renamed.
+    STATS_DOC = {
+        "prefill_dispatches": "jitted chunked-prefill dispatches run at "
+                              "admission (one per prefill_chunk positions "
+                              "per co-admitted batch)",
+        "decode_dispatches": "pool-wide decode dispatches (one per "
+                             "`step()` with any live slot)",
+        "tokens_out": "tokens emitted across all requests",
+        "requests_done": "requests retired (EOS or length)",
+        "prefill_pad_chunks_saved": "padded prefill chunks avoided by the "
+                                    "admission skew cap (prefill_skew_"
+                                    "chunks) splitting mismatched batches",
+        "live_slot_steps": "sum over steps of live slots advanced "
+                           "(occupancy-weighted utilization numerator)",
+        "peak_live_slots": "max live slots in any one decode dispatch",
+        "pages_in_use": "pool pages currently held (paged plane)",
+        "peak_pages_in_use": "high-water mark of pages_in_use",
+        "prefix_hits": "admissions that mapped a registered shared prefix "
+                       "instead of recomputing it",
+        "shared_pages": "physical pages mapped from shared prefixes "
+                        "(cumulative over admissions)",
+        "evicted_pages": "pages freed by spilling/dropping cold prefixes "
+                         "under pool pressure",
+        "readmitted_pages": "host-tier prefix pages uploaded back to the "
+                            "device pool on a later hit",
+        "admission_deferrals": "admissions deferred because the page pool "
+                               "could not cover the request's full "
+                               "reservation (FIFO: the head blocks)",
+        "tenants_admitted": "tenants granted an adapter slot (multi-"
+                            "tenant mode)",
+        "adapter_swaps": "hot swaps installed via update_adapter "
+                         "(blue/green or in-place)",
+        "adapter_slot_deferrals": "admissions deferred because the "
+                                  "request's tenant is still waiting for "
+                                  "an adapter slot (FIFO, like page "
+                                  "reservation deferral)",
+    }
+
     def __init__(self, model, params, *, num_slots: int, cache_len: int,
                  prefill_chunk: int = 8, eos_id: int | None = None,
                  paging: str = "auto", page_len: int = 16,
                  num_pages: int | None = None, host_spill: bool = True,
-                 prefill_skew_chunks: int = 1):
+                 prefill_skew_chunks: int = 1,
+                 max_tenants: int | None = None):
+        """Build the engine and compile its three programs.
+
+        num_slots: pool width S — the batch dimension of every dispatch
+            (default: none; required). cache_len: per-slot logical
+            context horizon in tokens. prefill_chunk: prompt positions
+            per admission dispatch (default 8). eos_id: retire-on-token
+            (default None: length-only). paging/page_len/num_pages/
+            host_spill: the paged KV plane (module doc). prefill_skew_
+            chunks: co-admission skew cap in chunks (default 1).
+        max_tenants: None (default) serves the single model in `params`;
+            an int T switches on multi-tenant mode — the model must have
+            been built with `lora_rank > 0` (the adapter spec sizes the
+            tenant-stacked buffer), `params` holds the FROZEN base
+            weights, and every `submit` names a tenant from
+            `add_tenant`. T bounds concurrently-resident adapters, not
+            tenants ever onboarded (slots recycle)."""
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         if prefill_chunk < 1:
@@ -163,27 +257,61 @@ class DecodeEngine:
         self._plen: dict[int, int] = {}
         self._done: dict[int, Completion] = {}
         self._next_rid = 0
-        self.stats = {
-            "prefill_dispatches": 0, "decode_dispatches": 0,
-            "tokens_out": 0, "requests_done": 0,
-            # admission-skew observability
-            "prefill_pad_chunks_saved": 0,
-            # occupancy-weighted utilization
-            "live_slot_steps": 0, "peak_live_slots": 0,
-            "pages_in_use": 0, "peak_pages_in_use": 0,
-            # paged data plane
-            "prefix_hits": 0, "shared_pages": 0, "evicted_pages": 0,
-            "readmitted_pages": 0, "admission_deferrals": 0,
-        }
+        # one counter per STATS_DOC key; the docstring table and the docs
+        # derive from the same mapping
+        self.stats = {k: 0 for k in self.STATS_DOC}
+
+        # ---- multi-tenant adapter plane ----
+        self.multi_tenant = max_tenants is not None
+        # adapter-slot id riding every dispatch; all-zero (and unused by
+        # the traced program) in single-model mode
+        self._tid = np.zeros((num_slots,), np.int32)
+        # per pool slot: owning tenant id / prefix namespace (single-model
+        # mode leaves both at their empty values)
+        self._slot_tid = np.full((num_slots,), -1, np.int64)
+        self._slot_ns: list[bytes] = [b""] * num_slots
+        if self.multi_tenant:
+            if max_tenants < 1:
+                raise ValueError("max_tenants must be >= 1")
+            spec_lora = (getattr(model, "spec", None) or {}).get("lora")
+            if not spec_lora:
+                raise ValueError(
+                    "multi-tenant serving needs a model built with "
+                    "lora_rank > 0 on an attention-stack family (the "
+                    "adapter spec sizes the tenant-stacked buffer)")
+            from repro.core.lora import stacked_adapter_zeros
+            self.max_tenants = int(max_tenants)
+            self._adapters = stacked_adapter_zeros(spec_lora,
+                                                   self.max_tenants)
+            self._tenants: dict[int, dict] = {}
+            self._next_tid = 0
+            self._aslot_free: list[int] = list(range(self.max_tenants))
+            self._aslot_rc = np.zeros((self.max_tenants,), np.int64)
+            self._draining: set[int] = set()
+            self._waiting: collections.deque = collections.deque()
+            self._serve_params = {**params, "lora_stack": self._adapters}
+        else:
+            self.max_tenants = None
+            self._serve_params = params
 
         # ---- the three compiled programs ----
-        def prefill_fn(params, cache, last, toks, valid):
+        # trace-time side-effect counters: each compiled program body
+        # bumps its key exactly once per (re)trace, so tests can assert
+        # that tenant onboarding / hot swaps NEVER recompile
+        self.trace_counts = {"prefill": 0, "decode": 0, "reset": 0}
+        mt = self.multi_tenant
+
+        def prefill_fn(params, cache, last, toks, valid, tids):
+            self.trace_counts["prefill"] += 1
+
             # toks/valid: (S, C); scan over the C chunk positions
             def stepf(carry, xs):
                 cache, last = carry
                 tok, act = xs
-                logits, cache = model.serve_step(
-                    params, cache, {"token": tok[:, None], "active": act})
+                batch = {"token": tok[:, None], "active": act}
+                if mt:
+                    batch["tenant"] = tids
+                logits, cache = model.serve_step(params, cache, batch)
                 last = jnp.where(act[:, None], logits.astype(jnp.float32),
                                  last)
                 return (cache, last), None
@@ -192,9 +320,12 @@ class DecodeEngine:
                                             (toks.T, valid.T))
             return cache, last, jnp.argmax(last, axis=-1).astype(jnp.int32)
 
-        def decode_fn(params, cache, tok, live):
-            logits, cache = model.serve_step(
-                params, cache, {"token": tok[:, None], "active": live})
+        def decode_fn(params, cache, tok, live, tids):
+            self.trace_counts["decode"] += 1
+            batch = {"token": tok[:, None], "active": live}
+            if mt:
+                batch["tenant"] = tids
+            logits, cache = model.serve_step(params, cache, batch)
             nxt = jnp.argmax(logits.astype(jnp.float32),
                              axis=-1).astype(jnp.int32)
             return cache, jnp.where(live, nxt, tok)
@@ -202,6 +333,7 @@ class DecodeEngine:
         axes = model.cache_slot_axes(self.cache)
 
         def reset_fn(cache, mask, starts):
+            self.trace_counts["reset"] += 1
             out = {}
             for k, v in cache.items():
                 ax = axes[k]
@@ -240,13 +372,22 @@ class DecodeEngine:
 
     def cache_bytes(self) -> int:
         """Device bytes held by the decode cache (pools + tables +
-        positions for the paged plane; per-slot caches otherwise)."""
+        positions for the paged plane; per-slot caches otherwise). The
+        tenant-stacked adapter buffer is NOT included (see
+        `adapter_bytes`)."""
         return int(sum(v.size * v.dtype.itemsize
                        for v in self.cache.values()))
 
-    def submit(self, prompt, max_new_tokens: int) -> int:
+    def submit(self, prompt, max_new_tokens: int,
+               tenant: int | None = None) -> int:
         """Enqueue one request; admitted into a free slot at the next
-        `step()`. Returns the request id."""
+        `step()` (FIFO). Returns the request id.
+
+        prompt: 1-D int token ids (>= 1 token). max_new_tokens: >= 1
+        generated-token budget, counted toward the slot's `cache_len`
+        horizon. tenant: required (a live `add_tenant` id) in
+        multi-tenant mode, forbidden otherwise; retiring tenants refuse
+        new work."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             raise ValueError(
@@ -263,10 +404,196 @@ class DecodeEngine:
                 raise ValueError(
                     f"request needs {need} pages but the page pool holds "
                     f"only num_pages={self.num_pages}")
+        if self.multi_tenant:
+            t = self._tenant(tenant)
+            if t["retiring"]:
+                raise ValueError(f"tenant {tenant} is retiring: no new "
+                                 f"requests accepted")
+            t["queued"] += 1
+            t["stats"]["requests_submitted"] += 1
+        elif tenant is not None:
+            raise ValueError("tenant= requires a multi-tenant engine "
+                             "(max_tenants=)")
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append((rid, prompt, int(max_new_tokens)))
+        self._queue.append((rid, prompt, int(max_new_tokens), tenant))
         return rid
+
+    # ------------------------------------------------------------------
+    # Multi-tenant surface.
+    # ------------------------------------------------------------------
+
+    @property
+    def num_free_adapter_slots(self) -> int:
+        """Adapter slots not held by a live or draining tenant version."""
+        self._require_mt()
+        return len(self._aslot_free)
+
+    def adapter_bytes(self) -> int:
+        """Device bytes held by the tenant-stacked adapter buffer."""
+        self._require_mt()
+        return int(sum(v.size * v.dtype.itemsize
+                       for v in jax.tree_util.tree_leaves(self._adapters)))
+
+    def add_tenant(self, adapters=None, *, name: str | None = None) -> int:
+        """Onboard a tenant; returns its tenant id (stable for the
+        tenant's lifetime, independent of adapter slots).
+
+        adapters: the tenant's trained adapter tree (the `lora` subtree
+        of a fine-tune run — leaves (n, d_in, r)/(n, r, d_out) matching
+        `adapter_template()`), or None for the exact base model (zero
+        adapter). When a free adapter slot exists the adapter is
+        installed immediately — a pure buffer write, ZERO recompilation;
+        otherwise the tenant WAITS (FIFO with other waiters, mirroring
+        paged admission deferral): its requests may be submitted but hold
+        the queue until a retiring tenant's slot frees."""
+        self._require_mt()
+        tid = self._next_tid
+        self._next_tid += 1
+        self._tenants[tid] = {
+            "tid": tid, "name": name or f"tenant-{tid}", "aslot": None,
+            "version": 0, "retiring": False, "removed": False,
+            "queued": 0, "inflight": 0, "pending_tree": adapters,
+            "stats": {"requests_submitted": 0, "requests_done": 0,
+                      "tokens_out": 0, "swaps": 0},
+        }
+        self._waiting.append(tid)
+        self._assign_adapter_slots()
+        return tid
+
+    def update_adapter(self, tid: int, adapters) -> None:
+        """Hot-swap a tenant's adapter (launch.swap calls this with a
+        freshly published, crc-verified checkpoint tree).
+
+        Blue/green: while the tenant has requests in flight on the old
+        version, the new version is installed into a SPARE adapter slot
+        and only new admissions route to it; the old slot drains with its
+        in-flight requests and frees on their last retirement. With no
+        in-flight use (or no spare slot) the write is in-place. Either
+        way it is data only — no recompilation — and the paged prefix
+        namespace rolls over with the version, so no pre-swap KV is ever
+        replayed for post-swap requests."""
+        t = self._tenant(tid)
+        if t["retiring"]:
+            raise ValueError(f"tenant {tid} is retiring: cannot swap")
+        if t["aslot"] is None:
+            t["pending_tree"] = adapters  # not yet installed: restage
+        elif self._aslot_rc[t["aslot"]] > 0 and self._aslot_free:
+            old = t["aslot"]
+            new = self._aslot_free.pop(0)
+            self._install_adapter(new, adapters)
+            t["aslot"] = new
+            self._draining.add(old)  # frees when its last request retires
+        else:
+            self._install_adapter(t["aslot"], adapters)
+        t["version"] += 1
+        t["stats"]["swaps"] += 1
+        self.stats["adapter_swaps"] += 1
+
+    def remove_tenant(self, tid: int) -> None:
+        """Retire a tenant: new submits are refused immediately; queued
+        and in-flight requests DRAIN on the tenant's current adapter
+        version, and the adapter slot returns to the free list (waking
+        FIFO waiters) when the last one retires. Idempotent."""
+        t = self._tenant(tid, allow_removed=True)
+        if t["retiring"]:
+            return
+        t["retiring"] = True
+        self._maybe_release(tid)
+
+    def tenant_stats(self, tid: int) -> dict:
+        """Per-tenant counters + lifecycle state: requests_submitted /
+        requests_done / tokens_out / swaps, plus state ('waiting' |
+        'active' | 'retiring' | 'removed'), version, adapter_slot,
+        queued, inflight."""
+        t = self._tenant(tid, allow_removed=True)
+        state = ("removed" if t["removed"] else
+                 "retiring" if t["retiring"] else
+                 "active" if t["aslot"] is not None else "waiting")
+        return dict(t["stats"], state=state, version=t["version"],
+                    adapter_slot=t["aslot"], queued=t["queued"],
+                    inflight=t["inflight"], name=t["name"])
+
+    def tenants(self) -> list[int]:
+        """Ids of tenants not yet removed, onboarding order."""
+        self._require_mt()
+        return [tid for tid, t in self._tenants.items()
+                if not t["removed"]]
+
+    def adapter_template(self):
+        """A zero per-tenant adapter tree (leaves (n, ...) — the stacked
+        buffer minus the tenant axis): the `load_checkpoint` template for
+        published adapter checkpoints (launch.swap)."""
+        self._require_mt()
+        return jax.tree_util.tree_map(
+            lambda buf: jnp.zeros(buf.shape[:1] + buf.shape[2:], buf.dtype),
+            self._adapters)
+
+    def adapter_crcs(self, tid: int) -> list[int]:
+        """crc32 of every adapter leaf INSTALLED on device for `tid`
+        (flatten order), over the same raw bytes checkpoint manifests
+        checksum — the bitwise hot-swap verification read back from the
+        live stacked buffer (launch.swap compares these against the
+        published manifest)."""
+        t = self._tenant(tid)
+        if t["aslot"] is None:
+            raise ValueError(f"tenant {tid} has no installed adapter yet")
+        from repro.checkpoint.store import leaf_crc32
+        return [leaf_crc32(leaf[:, t["aslot"]])
+                for leaf in jax.tree_util.tree_leaves(self._adapters)]
+
+    def _require_mt(self):
+        if not self.multi_tenant:
+            raise ValueError("this engine was built single-model; pass "
+                             "max_tenants= for multi-tenant serving")
+
+    def _tenant(self, tid, allow_removed: bool = False) -> dict:
+        self._require_mt()
+        t = self._tenants.get(tid)
+        if t is None:
+            raise ValueError(f"unknown tenant id {tid!r}")
+        if t["removed"] and not allow_removed:
+            raise ValueError(f"tenant {tid} was removed")
+        return t
+
+    def _install_adapter(self, aslot: int, tree) -> None:
+        from repro.core.lora import stacked_slot_update
+        self._adapters = stacked_slot_update(self._adapters, aslot, tree)
+        self._serve_params = {**self._serve_params,
+                              "lora_stack": self._adapters}
+
+    def _assign_adapter_slots(self) -> None:
+        """FIFO: hand freed adapter slots to waiting tenants."""
+        while self._waiting and self._aslot_free:
+            tid = self._waiting.popleft()
+            t = self._tenants[tid]
+            if t["removed"] or t["aslot"] is not None:
+                continue
+            aslot = self._aslot_free.pop(0)
+            self._install_adapter(aslot, t.pop("pending_tree", None))
+            t["aslot"] = aslot
+            self.stats["tenants_admitted"] += 1
+
+    def _maybe_release(self, tid: int) -> None:
+        """Retiring tenant with nothing queued or in flight: recycle."""
+        t = self._tenants[tid]
+        if (not t["retiring"] or t["removed"] or t["queued"]
+                or t["inflight"]):
+            return
+        t["removed"] = True
+        if t["aslot"] is not None:
+            # inflight == 0 implies no pool slot pins this adapter slot
+            self._aslot_free.append(t["aslot"])
+            t["aslot"] = None
+        self._assign_adapter_slots()
+
+    def _prefix_ns(self, tid) -> bytes:
+        """Prefix-store namespace: adapter-dependent KV never crosses a
+        tenant boundary or an adapter version."""
+        if not self.multi_tenant:
+            return b""
+        t = self._tenants[tid]
+        return f"{tid}:{t['version']}|".encode()
 
     def step(self) -> int:
         """Admit whatever fits into free slots (chunked prefill), then one
@@ -276,9 +603,10 @@ class DecodeEngine:
         live_idx = np.nonzero(self._live)[0]
         if live_idx.size == 0:
             return 0
-        self.cache, nxt = self._decode(self.params, self.cache,
+        self.cache, nxt = self._decode(self._serve_params, self.cache,
                                        jnp.asarray(self._tok),
-                                       jnp.asarray(self._live))
+                                       jnp.asarray(self._live),
+                                       jnp.asarray(self._tid))
         self.stats["decode_dispatches"] += 1
         self.stats["live_slot_steps"] += int(live_idx.size)
         self.stats["peak_live_slots"] = max(self.stats["peak_live_slots"],
@@ -293,13 +621,33 @@ class DecodeEngine:
         pool steps, whichever comes first — and return the completions
         finished so far (keyed by request id). Callers using `max_steps`
         as a safety bound can check `num_live` / `num_pending` afterwards
-        to see whether the engine actually drained."""
+        to see whether the engine actually drained.
+
+        An UNBOUNDED run raises RuntimeError if the queue head becomes
+        permanently unadmittable (nothing live, nothing admitted, nothing
+        retired in a step — e.g. a tenant waiting for an adapter slot no
+        drain will free). A bounded run instead returns at `max_steps`,
+        which is how callers pump the pool while waiting for external
+        action (a `remove_tenant`, a hot swap) to unblock it."""
         steps = 0
         while self._queue or self._live.any():
             if max_steps is not None and steps >= max_steps:
                 break
-            self.step()
+            before = len(self._queue)
+            advanced = self.step()
             steps += 1
+            if (max_steps is None and advanced == 0
+                    and not self._live.any()
+                    and len(self._queue) == before and self._queue):
+                # nothing live, nothing admitted, nothing retired: the
+                # head of the queue is permanently stuck (e.g. its tenant
+                # is waiting for an adapter slot no drain will ever free,
+                # or a page reservation nothing live can release)
+                raise RuntimeError(
+                    f"engine stalled with {len(self._queue)} queued "
+                    f"request(s) and no live slots: the queue head cannot "
+                    f"be admitted (waiting tenant without a free adapter "
+                    f"slot, or an unsatisfiable page reservation)")
         return dict(self._done)
 
     def completions(self) -> dict[int, Completion]:
@@ -384,13 +732,24 @@ class DecodeEngine:
           * skew cap: a candidate needing > prefill_skew_chunks more
             prefill chunks than its batch-mates waits for its own batch;
           * page reservation (paged plane): a candidate the pool cannot
-            cover even after evicting cold prefixes is deferred."""
+            cover even after evicting cold prefixes is deferred;
+          * adapter slot (multi-tenant): a candidate whose tenant is
+            still waiting for an adapter slot is deferred the same way
+            (FIFO — the queue holds until a retiring tenant drains)."""
         free = [s for s in range(self.num_slots) if not self._live[s]]
         batch = []  # (slot, rid, prompt, tail, max_new)
         ch_lo = ch_hi = 0
         while free and self._queue:
-            rid, prompt, max_new = self._queue[0]
-            hit = self._prefix.probe(prompt) if self.paged else None
+            rid, prompt, max_new, tenant = self._queue[0]
+            ns = self._prefix_ns(tenant) if self.multi_tenant else b""
+            if self.multi_tenant:
+                t = self._tenants[tenant]
+                if t["aslot"] is None:
+                    # tenant not yet holding an adapter slot: defer (the
+                    # slot arrives via _assign_adapter_slots on a drain)
+                    self.stats["adapter_slot_deferrals"] += 1
+                    break
+            hit = self._prefix.probe(prompt, ns) if self.paged else None
             j = hit[1] if hit is not None else 0
             ch = -(-(prompt.size - j * self.page_len) // self._chunk)
             if batch:
@@ -408,6 +767,18 @@ class DecodeEngine:
                 j, row = plan
             self._queue.popleft()
             slot = free.pop(0)
+            if self.multi_tenant:
+                # pin the tenant's CURRENT adapter slot to this pool slot:
+                # a blue/green swap mid-request moves the tenant to a new
+                # adapter slot, but this request keeps decoding on the old
+                # one (rc holds it) until it retires
+                aslot = t["aslot"]
+                self._tid[slot] = aslot
+                self._slot_tid[slot] = tenant
+                self._slot_ns[slot] = ns
+                self._aslot_rc[aslot] += 1
+                t["queued"] -= 1
+                t["inflight"] += 1
             ch_lo, ch_hi = (ch, ch) if not batch else (min(ch_lo, ch),
                                                        max(ch_hi, ch))
             if self.paged:
@@ -439,9 +810,10 @@ class DecodeEngine:
         last = self._last
         for c0 in range(0, padded, c):
             self.cache, last, first = self._prefill(
-                self.params, self.cache, last,
+                self._serve_params, self.cache, last,
                 jnp.asarray(toks[:, c0:c0 + c]),
-                jnp.asarray(valid[:, c0:c0 + c]))
+                jnp.asarray(valid[:, c0:c0 + c]),
+                jnp.asarray(self._tid))
             self.stats["prefill_dispatches"] += 1
         self._last = last
         first = np.asarray(first)
@@ -459,7 +831,8 @@ class DecodeEngine:
                 j_reg = prompt.size // self.page_len
                 if j_reg:
                     self._prefix.register(prompt,
-                                          self._row_pages[slot][:j_reg])
+                                          self._row_pages[slot][:j_reg],
+                                          self._slot_ns[slot])
             # the first output token falls out of the prefill itself
             self._emit(slot, int(first[slot]))
         if self.paged:
@@ -474,6 +847,8 @@ class DecodeEngine:
         self._gen[slot] += 1
         self._tok[slot] = tok
         self.stats["tokens_out"] += 1
+        if self.multi_tenant:
+            self._tenants[self._slot_tid[slot]]["stats"]["tokens_out"] += 1
         if self.eos_id is not None and tok == self.eos_id:
             self._retire(slot, "eos")
         elif self._gen[slot] >= self._max[slot]:
@@ -487,6 +862,22 @@ class DecodeEngine:
         self._live[slot] = False
         self._rid[slot] = -1
         self.stats["requests_done"] += 1
+        if self.multi_tenant:
+            tid = int(self._slot_tid[slot])
+            aslot = int(self._tid[slot])
+            t = self._tenants[tid]
+            t["inflight"] -= 1
+            t["stats"]["requests_done"] += 1
+            self._aslot_rc[aslot] -= 1
+            if self._aslot_rc[aslot] == 0 and aslot in self._draining:
+                # last request on a blue/green-superseded adapter version:
+                # its slot returns to the pool (and may wake a FIFO waiter)
+                self._draining.discard(aslot)
+                self._aslot_free.append(aslot)
+                self._assign_adapter_slots()
+            self._slot_tid[slot] = -1
+            self._slot_ns[slot] = b""
+            self._maybe_release(tid)
         if self.paged:
             # O(table) recycle: pages go back to the free list (or stay
             # alive under their prefix-registry / co-sharing references);

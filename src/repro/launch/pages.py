@@ -116,6 +116,11 @@ class Prefix:
     tier: str  # "device" | "host"
     host_data: dict[str, np.ndarray] | None = None
     last_use: int = 0
+    # namespace baked into every lookup key: the multi-tenant engine scopes
+    # prefixes to (tenant, adapter version) — KV bytes depend on the
+    # adapter, so sharing across tenants (or across a hot swap) would
+    # replay the WRONG cache
+    ns: bytes = b""
 
     @property
     def n_pages(self) -> int:
@@ -147,8 +152,8 @@ class PrefixStore:
 
     # -- keys ----------------------------------------------------------
 
-    def _key(self, tokens: np.ndarray, j: int) -> bytes:
-        return np.ascontiguousarray(
+    def _key(self, tokens: np.ndarray, j: int, ns: bytes = b"") -> bytes:
+        return ns + np.ascontiguousarray(
             tokens[: j * self.page_len], dtype=np.int32).tobytes()
 
     def _touch(self, entry: Prefix) -> None:
@@ -157,8 +162,9 @@ class PrefixStore:
 
     # -- probe ---------------------------------------------------------
 
-    def probe(self, prompt: np.ndarray):
-        """Longest full-page prefix hit for `prompt`, or None.
+    def probe(self, prompt: np.ndarray, ns: bytes = b""):
+        """Longest full-page prefix hit for `prompt` in namespace `ns`,
+        or None.
 
         Returns (entry, j, tier). j < pages_needed(len(prompt)) strictly:
         at least one prompt token is always left for the tail prefill (the
@@ -167,7 +173,7 @@ class PrefixStore:
         """
         j_max = (len(prompt) - 1) // self.page_len
         for j in range(j_max, 0, -1):
-            key = self._key(np.asarray(prompt), j)
+            key = self._key(np.asarray(prompt), j, ns)
             for tier, table in (("device", self._dev), ("host", self._host)):
                 got = table.get(key)
                 if got is not None:
@@ -178,7 +184,8 @@ class PrefixStore:
 
     # -- register ------------------------------------------------------
 
-    def register(self, prompt: np.ndarray, pages: list[int]) -> bool:
+    def register(self, prompt: np.ndarray, pages: list[int],
+                 ns: bytes = b"") -> bool:
         """Register `pages` (the slot's first full pages) as a device-tier
         shareable prefix; increfs each page. Dedupes: if the full key is
         already registered (either tier) nothing happens and False is
@@ -189,15 +196,16 @@ class PrefixStore:
         tokens = np.asarray(prompt, np.int32)[: j * self.page_len].copy()
         if len(tokens) != j * self.page_len:
             raise ValueError("register needs j full pages of tokens")
-        full_key = self._key(tokens, j)
+        full_key = self._key(tokens, j, ns)
         if full_key in self._dev or full_key in self._host:
             return False
-        entry = Prefix(tokens=tokens, pages=list(pages), tier="device")
+        entry = Prefix(tokens=tokens, pages=list(pages), tier="device",
+                       ns=ns)
         self.pool.incref(entry.pages)
         self._touch(entry)
         self._dev_entries.append(entry)
         for i in range(1, j + 1):
-            self._dev.setdefault(self._key(tokens, i), (entry, i))
+            self._dev.setdefault(self._key(tokens, i, ns), (entry, i))
         return True
 
     # -- eviction / tiering --------------------------------------------
@@ -211,7 +219,7 @@ class PrefixStore:
         entry = min(self._dev_entries, key=lambda e: e.last_use)
         self._dev_entries.remove(entry)
         for i in range(1, len(entry.pages) + 1):
-            key = self._key(entry.tokens, i)
+            key = self._key(entry.tokens, i, entry.ns)
             if self._dev.get(key, (None, 0))[0] is entry:
                 del self._dev[key]
         return entry
@@ -226,7 +234,8 @@ class PrefixStore:
         entry.pages = []
         j = len(entry.tokens) // self.page_len
         for i in range(1, j + 1):
-            self._host.setdefault(self._key(entry.tokens, i), (entry, i))
+            self._host.setdefault(self._key(entry.tokens, i, entry.ns),
+                                  (entry, i))
         return freed
 
     def drop(self, entry: Prefix) -> list[int]:
@@ -239,7 +248,7 @@ class PrefixStore:
         The alloc reference becomes the registry reference."""
         j = len(entry.tokens) // self.page_len
         for i in range(1, j + 1):
-            key = self._key(entry.tokens, i)
+            key = self._key(entry.tokens, i, entry.ns)
             if self._host.get(key, (None, 0))[0] is entry:
                 del self._host[key]
         entry.tier = "device"
@@ -248,7 +257,8 @@ class PrefixStore:
         self._touch(entry)
         self._dev_entries.append(entry)
         for i in range(1, j + 1):
-            self._dev.setdefault(self._key(entry.tokens, i), (entry, i))
+            self._dev.setdefault(self._key(entry.tokens, i, entry.ns),
+                                 (entry, i))
 
     # -- introspection -------------------------------------------------
 

@@ -139,7 +139,9 @@ def greedy_decode(model, params, prompts: jnp.ndarray, gen: int,
     return jnp.concatenate(out, axis=1)
 
 
-def main():
+def build_serve_parser() -> argparse.ArgumentParser:
+    """The serve CLI's argument surface (importable so tests/docs can
+    introspect it — tests/test_docs.py asserts every flag is documented)."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny", choices=ARCH_IDS + ["tiny"])
     ap.add_argument("--reduced", action="store_true")
@@ -193,13 +195,41 @@ def main():
     ap.add_argument("--cache-dir", default=None,
                     help="cache root (default <repo>/.cache or "
                          "$REPRO_CACHE_DIR)")
+    ap.add_argument("--tenants", type=int, default=None,
+                    help="serve multi-tenant: adapter-slot count of the "
+                         "tenant-stacked DP-LoRA buffer (engine mode only; "
+                         "implies --lora-rank > 0); requests round-robin "
+                         "over the tenants")
+    ap.add_argument("--lora-rank", type=int, default=4,
+                    help="adapter rank for multi-tenant serving (must "
+                         "match the rank the adapters were trained at)")
+    ap.add_argument("--adapter-dir", action="append", default=None,
+                    metavar="DIR",
+                    help="publish directory of a training service "
+                         "(<service_dir>/publish) to load tenant adapters "
+                         "from; repeatable — one tenant per directory, "
+                         "extra tenants (up to --tenants) serve the base "
+                         "model")
+    ap.add_argument("--watch", action="store_true",
+                    help="poll each --adapter-dir between pool steps and "
+                         "hot-swap newly published adapters into the live "
+                         "engine (launch.swap.AdapterWatcher)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap
+
+
+def main():
+    args = build_serve_parser().parse_args()
 
     from repro.launch.train import record_cache_program, setup_caches
     setup_caches(args)
 
     cfg = get_config(args.arch, reduced=args.reduced)
+    if args.tenants is not None:
+        if args.mode != "engine":
+            raise SystemExit("--tenants requires --mode engine")
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, lora_rank=args.lora_rank)
     model = build_model(cfg)
     params = init_params(model.spec, jax.random.PRNGKey(args.seed))
     record_cache_program(args, entry="serve", arch=cfg.name)
@@ -236,10 +266,37 @@ def main():
             cache_len = -(-cache_len // args.page_len) * args.page_len
         eng = DecodeEngine(model, params, num_slots=num_slots,
                            cache_len=cache_len, paging=args.paging,
-                           page_len=args.page_len, num_pages=args.num_pages)
-        for r in reqs:
-            eng.submit(r, max_new_tokens=args.gen)
-        done = eng.run()
+                           page_len=args.page_len, num_pages=args.num_pages,
+                           max_tenants=args.tenants)
+        watchers = []
+        tids = [None]
+        if args.tenants is not None:
+            from repro.launch.swap import AdapterWatcher
+            tids = [eng.add_tenant(name=f"tenant-{i}")
+                    for i in range(args.tenants)]
+            for tid, d in zip(tids, args.adapter_dir or []):
+                w = AdapterWatcher(eng, tid, d)
+                got = w.poll()  # install whatever is already published
+                print(f"# tenant {tid} <- {d}: "
+                      f"{'step ' + str(got.step) if got else 'base model'}")
+                watchers.append(w)
+        for i, r in enumerate(reqs):
+            eng.submit(r, max_new_tokens=args.gen,
+                       tenant=tids[i % len(tids)])
+        if args.watch and watchers:
+            # pump the pool in short bursts, polling the publish dirs in
+            # the gaps — a swap lands between dispatches, never inside one
+            done = {}
+            while eng.num_pending or eng.num_live:
+                eng.run(max_steps=8)
+                for w in watchers:
+                    got = w.poll()
+                    if got is not None:
+                        print(f"# hot swap: tenant {got.tenant} -> step "
+                              f"{got.step} (v{got.version}, bitwise ok)")
+            done = eng.completions()
+        else:
+            done = eng.run()
         wall = time.time() - t0
         toks = np.full((args.batch, args.gen), -1, np.int32)
         for rid, c in done.items():
@@ -248,6 +305,15 @@ def main():
                  f"dispatches={eng.stats['decode_dispatches']}d"
                  f"+{eng.stats['prefill_dispatches']}p "
                  f"paged={'yes' if eng.paged else 'no'}")
+        if eng.multi_tenant:
+            extra += (f" tenants={len(tids)} "
+                      f"swaps={eng.stats['adapter_swaps']} "
+                      f"traces={sum(eng.trace_counts.values())}")
+            for tid in tids:
+                ts = eng.tenant_stats(tid)
+                print(f"# tenant {tid} ({ts['name']}): v{ts['version']} "
+                      f"done={ts['requests_done']} "
+                      f"tokens={ts['tokens_out']}")
         if eng.paged:
             s = eng.stats
             extra += (f" pages={eng.num_pages}x{eng.page_len} "

@@ -309,6 +309,11 @@ class TrainService:
 
         os.makedirs(args.service_dir, exist_ok=True)
         self.ckpt_dir = os.path.join(args.service_dir, "ckpt")
+        # adapter-only publishes for the serving side (launch.swap): only
+        # written when the run actually trains adapters (trainable_key ==
+        # "lora"), small (just the adapter subtree), and carrying the
+        # epsilon spent so serving can display provenance
+        self.publish_dir = os.path.join(args.service_dir, "publish")
         self.ledger = PrivacyLedger(
             os.path.join(args.service_dir, "ledger.jsonl"))
 
@@ -422,10 +427,28 @@ class TrainService:
             if stage == "pre-rename":
                 self.fault.fire("pre-ckpt-rename", step)
 
-        return with_retries(
+        path = with_retries(
             lambda: save_checkpoint(self.ckpt_dir, step, tree, meta=meta,
                                     fault_hook=hook),
             sleep=self.sleep, describe="checkpoint save")
+        self._publish_adapter(step)
+        return path
+
+    def _publish_adapter(self, step: int) -> None:
+        """Adapter-only publish for live serving (`launch.swap` watches
+        `<service_dir>/publish`). Published AFTER the full checkpoint so
+        a publish never refers to training state that could be lost; the
+        tree is ``{"lora": ...}`` to match the watcher's template."""
+        if (getattr(self.runtime.model, "trainable_key", None) != "lora"
+                or "lora" not in self.params):
+            return
+        meta = {"epsilon": self.epsilon(), "delta": self.delta,
+                "source_step": step}
+        with_retries(
+            lambda: save_checkpoint(self.publish_dir, step,
+                                    {"lora": self.params["lora"]},
+                                    meta=meta),
+            sleep=self.sleep, describe="adapter publish")
 
     def run(self) -> dict:
         """Train until target_steps are committed or the budget runs out.

@@ -1,0 +1,115 @@
+"""Hot adapter swap: feed freshly published DP-LoRA checkpoints into a
+LIVE multi-tenant engine.
+
+The training side (`launch.service.TrainService`) publishes adapter-only
+checkpoints — tree ``{"lora": <adapter subtree>}`` — to its ``publish/``
+directory as fine-tuning progresses, each with the standard per-leaf
+crc32 manifest (`checkpoint.store`). The serving side runs an
+`AdapterWatcher` per (tenant, publish directory): between engine
+dispatches it
+
+  1. polls `latest_verified_step` (torn or bit-rotted publishes are
+     invisible — only a step whose every shard passes checksum counts);
+  2. diffs the step's manifest against what the tenant is running —
+     same step, or same per-leaf crcs (a re-publish of identical
+     weights), means no swap;
+  3. loads the tree with ``verify=True`` against the engine's
+     `adapter_template()` and calls `DecodeEngine.update_adapter`,
+     which `jax.device_put`s the leaves into the tenant's slot of the
+     stacked adapter buffer — pure data, ZERO recompilation, blue/green
+     versioned so requests already decoding on the old version drain on
+     it before the slot remaps;
+  4. reads the installed slot back off the device and compares
+     `adapter_crcs` with the manifest: the swap is confirmed BITWISE
+     equal to the published checkpoint, not merely "a load happened".
+
+`poll()` is deliberately synchronous and cheap when idle (one directory
+listing + one manifest read on a new step); drive it from the serving
+loop between `engine.step()` calls or on a timer thread. See
+docs/serving.md for the tenant-onboarding walkthrough and
+examples/multi_tenant_serve.py for the full train -> publish -> swap
+loop in one process.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.checkpoint.store import (latest_verified_step, load_checkpoint,
+                                    manifest_crcs)
+
+__all__ = ["AdapterWatcher", "SwapResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapResult:
+    """Outcome of one detected publish: the checkpoint step installed,
+    the tenant's new adapter version, and `verified` = the on-device
+    slot read back bitwise-equal to the manifest (always True on a
+    successful poll; a mismatch raises instead)."""
+
+    step: int
+    tenant: int
+    version: int
+    verified: bool
+
+
+class AdapterWatcher:
+    """Poll one publish directory and hot-swap one tenant's adapter.
+
+    engine: a multi-tenant `DecodeEngine`. tenant: the tenant id whose
+    adapter tracks this directory. directory: the training service's
+    publish dir (``<service_dir>/publish``). subtree: key of the adapter
+    subtree inside the published tree (the service publishes
+    ``{"lora": ...}``).
+
+    The watcher owns no thread: call `poll()` whenever convenient (the
+    serve CLI's ``--watch`` does it between pool steps). Each poll costs
+    a directory scan; a new verified step additionally costs one
+    checkpoint load + one device round-trip for the bitwise check.
+    """
+
+    def __init__(self, engine, tenant: int, directory: str, *,
+                 subtree: str = "lora"):
+        self.engine = engine
+        self.tenant = tenant
+        self.directory = directory
+        self.subtree = subtree
+        self.installed_step: int | None = None
+        self._installed_crcs: list[int] | None = None
+        self.stats = {"polls": 0, "swaps": 0, "skipped_unchanged": 0}
+
+    def poll(self) -> SwapResult | None:
+        """Install the newest verified publish if it differs from what
+        the tenant runs. Returns a `SwapResult` on a swap, None when
+        nothing new. Raises RuntimeError if the installed slot reads
+        back different from the manifest (a failed device write — the
+        engine keeps serving the PREVIOUS version in that case only if
+        the blue/green path was taken; treat it as fatal)."""
+        self.stats["polls"] += 1
+        step = latest_verified_step(self.directory)
+        if step is None or step == self.installed_step:
+            return None
+        crcs = manifest_crcs(self.directory, step)
+        if crcs is not None and crcs == self._installed_crcs:
+            # re-publish of bitwise-identical weights: record the step so
+            # the manifest read isn't repeated, but don't burn an adapter
+            # slot on a no-op blue/green rotation
+            self.installed_step = step
+            self.stats["skipped_unchanged"] += 1
+            return None
+        template = {self.subtree: self.engine.adapter_template()}
+        tree = load_checkpoint(self.directory, step, template, verify=True)
+        self.engine.update_adapter(self.tenant, tree[self.subtree])
+        live = self.engine.adapter_crcs(self.tenant)
+        if crcs is not None and live != crcs:
+            raise RuntimeError(
+                f"hot swap of tenant {self.tenant} to step {step} is not "
+                f"bitwise equal to the published checkpoint "
+                f"({self.directory}): device readback crc mismatch")
+        self.installed_step = step
+        self._installed_crcs = crcs if crcs is not None else live
+        self.stats["swaps"] += 1
+        return SwapResult(step=step, tenant=self.tenant,
+                          version=self.engine.tenant_stats(
+                              self.tenant)["version"],
+                          verified=True)

@@ -254,6 +254,14 @@ def gqa_attention(cfg: ModelConfig, params, x, th, positions, *,
                  lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
 
 
+def _stacked_delta(x, lora, tenant, alpha):
+    """Serving-side multi-tenant adapter term: `lora` is one projection's
+    tenant-stacked pair {'a': (T, d_in, r), 'b': (T, r, d_out)}, `tenant`
+    the (B,) int32 adapter-slot ids (core.lora.stacked_lora_delta)."""
+    from repro.core.lora import stacked_lora_delta
+    return stacked_lora_delta(x, lora["a"], lora["b"], tenant, alpha)
+
+
 def _paged_write(pool, new, pt, pos, active):
     """One-token scatter through a page table. pool: (N+1, L, ...) with the
     LAST page reserved as the trash page; new: (B, 1, ...); pt: (B, P)
@@ -272,7 +280,7 @@ def _paged_write(pool, new, pt, pos, active):
 
 
 def gqa_decode_paged(cfg: ModelConfig, params, x, th, kpool, vpool, pt,
-                     pos, *, active=None):
+                     pos, *, active=None, lora=None, tenant=None):
     """One-token GQA decode through a paged KV cache (full-cache only; ring
     windows keep the contiguous path — their O(W) state doesn't fragment).
 
@@ -282,9 +290,14 @@ def gqa_decode_paged(cfg: ModelConfig, params, x, th, kpool, vpool, pt,
     replicates `attend`'s single-shot math over the table-gathered pages,
     so with matching logical capacity the output is bitwise identical to
     `gqa_decode` on a contiguous cache holding the same values; the Pallas
-    route is the TPU paged-gather kernel (allclose-level)."""
+    route is the TPU paged-gather kernel (allclose-level).
+
+    lora/tenant: optional tenant-stacked {'qkv', 'o'} adapters + (B,)
+    int32 slot ids for multi-tenant serving (see `gqa_decode`)."""
     from repro.kernels import backend as KB
     qkv = L.linear(params["qkv"], x, th["qkv"])
+    if lora is not None:
+        qkv = qkv + _stacked_delta(x, lora["qkv"], tenant, cfg.lora_alpha)
     q, k, v = _split_qkv(cfg, qkv)
     q, k = _qk_norm(cfg, params, th, q, k)
     posb = pos[:, None]
@@ -300,11 +313,14 @@ def gqa_decode_paged(cfg: ModelConfig, params, x, th, kpool, vpool, pt,
     out = KB.active().paged_attn(qr, kpool, vpool, pt, pos,
                                  scale=1.0 / math.sqrt(hd))
     out = out.reshape(b, 1, h * hd).astype(q.dtype)
-    return L.linear(params["o"], out, th["o"]), kpool, vpool
+    y = L.linear(params["o"], out, th["o"])
+    if lora is not None:
+        y = y + _stacked_delta(out, lora["o"], tenant, cfg.lora_alpha)
+    return y, kpool, vpool
 
 
 def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
-               window=None, active=None):
+               window=None, active=None, lora=None, tenant=None):
     """One-token decode. x: (B, 1, D); cache_k/v: (B, S, KV, hd); pos: (B,)
     number of tokens already in the cache (new token index).
 
@@ -312,8 +328,17 @@ def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
     capacity seq_len. Keys are stored post-RoPE. `active`: optional (B,)
     bool — rows with False keep their cache entries untouched (their
     returned attention output is garbage and must be discarded; the
-    caller also keeps their `pos` frozen, see transformer.serve_step)."""
+    caller also keeps their `pos` frozen, see transformer.serve_step).
+
+    lora/tenant: optional multi-tenant adapters — `lora` holds the
+    tenant-stacked {'qkv', 'o'} pairs of ONE layer ({'a': (T, d_in, r),
+    'b': (T, r, d_out)}), `tenant` the (B,) int32 adapter-slot ids. Each
+    row adds its own tenant's low-rank delta to the frozen-base
+    projections (core.lora.stacked_lora_delta), mirroring the training
+    side's `dp_lora_linear` forward."""
     qkv = L.linear(params["qkv"], x, th["qkv"])
+    if lora is not None:
+        qkv = qkv + _stacked_delta(x, lora["qkv"], tenant, cfg.lora_alpha)
     q, k, v = _split_qkv(cfg, qkv)
     q, k = _qk_norm(cfg, params, th, q, k)
     posb = pos[:, None]  # (B, 1)
@@ -334,7 +359,10 @@ def gqa_decode(cfg: ModelConfig, params, x, th, cache_k, cache_v, pos, *,
         kpos = jnp.where(kpos >= 0, kpos, jnp.iinfo(jnp.int32).max - 1)
     out = attend(q, cache_k, cache_v, posb, kpos, causal=True, window=window)
     out = out.reshape(x.shape[0], 1, -1)
-    return L.linear(params["o"], out, th["o"]), cache_k, cache_v
+    y = L.linear(params["o"], out, th["o"])
+    if lora is not None:
+        y = y + _stacked_delta(out, lora["o"], tenant, cfg.lora_alpha)
+    return y, cache_k, cache_v
 
 
 # ---------------------------------------------------------------------------
@@ -410,15 +438,36 @@ def mla_attention(cfg: ModelConfig, params, x, th, positions, *, causal=True,
                  lora_th=lora_th and lora_th.get("o"), alpha=cfg.lora_alpha)
 
 
+def _mla_lora_sel(cfg, lora, tenant):
+    """Gather each row's tenant kv_b adapter factors for absorbed decode.
+
+    Returns (A (B, lr, r), Bn (B, r, H, nope), Bv (B, r, H, vd), scale):
+    the low-rank factors of the per-tenant delta on W_UK / W_UV — the
+    absorbed MLA form applies the adapter WITHOUT materializing the dense
+    (lr, H·(nope+vd)) per-row weight delta; both sides stay O(r)."""
+    h = cfg.num_heads
+    nope, vd = cfg.qk_nope_head_dim, cfg.v_head_dim
+    rk = lora["kv_b"]["a"].shape[-1]
+    a = jnp.take(lora["kv_b"]["a"], tenant, axis=0).astype(jnp.float32)
+    bm = jnp.take(lora["kv_b"]["b"], tenant, axis=0).astype(jnp.float32)
+    bm = bm.reshape(bm.shape[0], rk, h, nope + vd)
+    return a, bm[..., :nope], bm[..., nope:], cfg.lora_alpha / rk
+
+
 def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos,
-               *, active=None):
+               *, active=None, lora=None, tenant=None):
     """Absorbed-form MLA decode against the latent cache.
 
     cache_ckv: (B, S, lr); cache_krope: (B, S, rope). One new token.
     W_UK is folded into the query (q_lat = q_nope @ W_UK per head) and W_UV
     applied after attending over latents, so per-step cost is O(S·lr), not
     O(S·H·hd). `active`: optional (B,) row mask, as in `gqa_decode`.
-    """
+
+    lora/tenant: optional tenant-stacked {'kv_b', 'o'} adapters + (B,)
+    int32 slot ids. The kv_b delta rides THROUGH the absorption: its
+    W_UK part shifts q_lat (score side), its W_UV part shifts the
+    post-attention latent expansion — each in low-rank factored form via
+    `_mla_lora_sel`, per row (multi-tenant serving)."""
     b = x.shape[0]
     h = cfg.num_heads
     nope, rope, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -442,6 +491,10 @@ def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos,
     w_uv = w_kv_b[..., nope:]  # (lr, H, vd)
     q_lat = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))  # (B, 1, H, lr)
+    if lora is not None:
+        la, lbn, lbv, lsc = _mla_lora_sel(cfg, lora, tenant)
+        t1 = jnp.einsum("bohn,brhn->bohr", q_nope.astype(jnp.float32), lbn)
+        q_lat = q_lat + jnp.einsum("bohr,blr->bohl", t1, la) * lsc
     scores = (jnp.einsum("bohl,bsl->bhos", q_lat,
                          cache_ckv.astype(jnp.float32))
               + jnp.einsum("bohr,bsr->bhos", q_rope.astype(jnp.float32),
@@ -453,12 +506,18 @@ def mla_decode(cfg: ModelConfig, params, x, th, cache_ckv, cache_krope, pos,
     w = jax.nn.softmax(scores, axis=-1)  # (B, H, 1, S)
     lat = jnp.einsum("bhos,bsl->bohl", w, cache_ckv.astype(jnp.float32))
     out = jnp.einsum("bohl,lhv->bohv", lat, w_uv.astype(jnp.float32))
+    if lora is not None:
+        t2 = jnp.einsum("bohl,blr->bohr", lat, la)
+        out = out + jnp.einsum("bohr,brhv->bohv", t2, lbv) * lsc
     out = out.reshape(b, 1, h * vd).astype(x.dtype)
-    return L.linear(params["o"], out, th["o"]), cache_ckv, cache_krope
+    y = L.linear(params["o"], out, th["o"])
+    if lora is not None:
+        y = y + _stacked_delta(out, lora["o"], tenant, cfg.lora_alpha)
+    return y, cache_ckv, cache_krope
 
 
 def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
-                     active=None):
+                     active=None, lora=None, tenant=None):
     """Absorbed-form MLA decode through a paged latent cache.
 
     latpool: (N+1, L, lr + rope) physical page pool storing the
@@ -472,7 +531,12 @@ def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
     absorbed decode at matching logical capacity. The Pallas route feeds
     the generic paged kernel with q = concat(q_lat, q_rope) against the
     latent pool (kv=1, g=H, dv=lr truncating the value read to the
-    compressed latent)."""
+    compressed latent).
+
+    lora/tenant: optional tenant-stacked {'kv_b', 'o'} adapters + (B,)
+    int32 slot ids, applied in absorbed low-rank form as in
+    `mla_decode` (the q_lat shift lands BEFORE the paged gather, so both
+    kernel routes see the adapted query)."""
     from repro.kernels import backend as KB
     b = x.shape[0]
     h = cfg.num_heads
@@ -495,6 +559,10 @@ def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
     w_uv = w_kv_b[..., nope:]  # (lr, H, vd)
     q_lat = jnp.einsum("bohn,lhn->bohl", q_nope.astype(jnp.float32),
                        w_uk.astype(jnp.float32))  # (B, 1, H, lr)
+    if lora is not None:
+        la, lbn, lbv, lsc = _mla_lora_sel(cfg, lora, tenant)
+        t1 = jnp.einsum("bohn,brhn->bohr", q_nope.astype(jnp.float32), lbn)
+        q_lat = q_lat + jnp.einsum("bohr,blr->bohl", t1, la) * lsc
 
     # shape hints keep this branch and the engine's own paged_attn dispatch
     # on the SAME autotune bucket (t = logical context, din/dout = head dims)
@@ -521,5 +589,11 @@ def mla_decode_paged(cfg: ModelConfig, params, x, th, latpool, pt, pos, *,
         w = jax.nn.softmax(scores, axis=-1)  # (B, H, 1, S)
         lat = jnp.einsum("bhos,bsl->bohl", w, cache_ckv.astype(jnp.float32))
     out = jnp.einsum("bohl,lhv->bohv", lat, w_uv.astype(jnp.float32))
+    if lora is not None:
+        t2 = jnp.einsum("bohl,blr->bohr", lat, la)
+        out = out + jnp.einsum("bohr,brhv->bohv", t2, lbv) * lsc
     out = out.reshape(b, 1, h * vd).astype(x.dtype)
-    return L.linear(params["o"], out, th["o"]), latpool
+    y = L.linear(params["o"], out, th["o"])
+    if lora is not None:
+        y = y + _stacked_delta(out, lora["o"], tenant, cfg.lora_alpha)
+    return y, latpool

@@ -760,16 +760,30 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
         return cache
 
     def serve_step(params, cache, batch):
-        """batch: {'token': (B, 1) int32, optional 'active': (B,) bool};
-        returns (logits (B, V), cache).
+        """batch: {'token': (B, 1) int32, optional 'active': (B,) bool,
+        optional 'tenant': (B,) int32}; returns (logits (B, V), cache).
 
         `active` is the slot-pool write/retire hook (launch.engine): rows
         with `active=False` come back with a bit-identical cache slot and
         an unchanged position — their logits are garbage and must be
         ignored by the caller. Omitting the key advances every row (the
-        historical single-batch path, no masking cost)."""
+        historical single-batch path, no masking cost).
+
+        Multi-tenant serving: when `params` carries a 'lora_stack' subtree
+        (tenant-stacked adapters, leaves (n, T, ...) — see
+        core.lora.stacked_adapter_zeros) AND the batch carries 'tenant'
+        (per-row int32 adapter-slot ids), every attention projection adds
+        its row's tenant adapter delta (attention.gqa_decode /
+        mla_decode and their paged variants). Both are data: admitting a
+        tenant or hot-swapping an adapter never retraces this program."""
         token = batch["token"]
         active = batch.get("active")
+        lstack = params.get("lora_stack")
+        tenant = batch.get("tenant")
+        if (lstack is None) != (tenant is None):
+            raise ValueError(
+                "multi-tenant serve_step needs BOTH params['lora_stack'] "
+                "and batch['tenant'] (or neither)")
         b = token.shape[0]
         pos = cache["pos"]
         th = layout.pack_value(jnp.inf, b)
@@ -892,14 +906,19 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                     return {k[len(f"{run_prefix}/{sub}/"):]: inf_b
                             for k in names}
 
+                # tenant-stacked adapters ride the layer scan as one more
+                # xs leaf (None when single-tenant: an empty pytree)
+                ls = lstack[name] if lstack is not None else None
+
                 if cfg.attention_kind == "mla" and "pt" in cache:
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
-                        bp, latpool = xs
+                        bp, lp, latpool = xs
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
                         att, lat_n = A.mla_decode_paged(
                             cfg, bp["attn"], hn, mk("attn"), latpool,
-                            cache["pt"], pos, active=active)
+                            cache["pt"], pos, active=active, lora=lp,
+                            tenant=tenant)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -914,16 +933,17 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                         return h + y, lat_n
 
                     x, lat_n = jax.lax.scan(
-                        body, x, (params[name], cache[f"{name}_latpool"]))
+                        body, x, (params[name], ls,
+                                  cache[f"{name}_latpool"]))
                     new_cache[f"{name}_latpool"] = lat_n
                 elif cfg.attention_kind == "mla":
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
-                        bp, ckv, krope = xs
+                        bp, lp, ckv, krope = xs
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
                         att, ckv_n, krope_n = A.mla_decode(
                             cfg, bp["attn"], hn, mk("attn"), ckv, krope, pos,
-                            active=active)
+                            active=active, lora=lp, tenant=tenant)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -938,18 +958,19 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                         return h + y, (ckv_n, krope_n)
 
                     x, (ckv_n, kr_n) = jax.lax.scan(
-                        body, x, (params[name], cache[f"{name}_ckv"],
+                        body, x, (params[name], ls, cache[f"{name}_ckv"],
                                   cache[f"{name}_krope"]))
                     new_cache[f"{name}_ckv"] = ckv_n
                     new_cache[f"{name}_krope"] = kr_n
                 elif "pt" in cache:
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
-                        bp, kpool, vpool = xs
+                        bp, lp, kpool, vpool = xs
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
                         att, kp_n, vp_n = A.gqa_decode_paged(
                             cfg, bp["attn"], hn, mk("attn"), kpool, vpool,
-                            cache["pt"], pos, active=active)
+                            cache["pt"], pos, active=active, lora=lp,
+                            tenant=tenant)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -964,18 +985,19 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                         return h + y, (kp_n, vp_n)
 
                     x, (kp_n, vp_n) = jax.lax.scan(
-                        body, x, (params[name], cache[f"{name}_kpool"],
+                        body, x, (params[name], ls, cache[f"{name}_kpool"],
                                   cache[f"{name}_vpool"]))
                     new_cache[f"{name}_kpool"] = kp_n
                     new_cache[f"{name}_vpool"] = vp_n
                 else:
                     def body(h, xs, mk=mk, moe_layer=moe_layer):
-                        bp, ck, cv = xs
+                        bp, lp, ck, cv = xs
                         hn = L.rmsnorm(bp["attn_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
                         att, ck_n, cv_n = A.gqa_decode(
                             cfg, bp["attn"], hn, mk("attn"), ck, cv, pos,
-                            window=window, active=active)
+                            window=window, active=active, lora=lp,
+                            tenant=tenant)
                         h = h + att
                         hn = L.rmsnorm(bp["mlp_norm"], h, inf_b,
                                        eps=cfg.norm_eps)
@@ -990,7 +1012,7 @@ def _make_decoder_serve(cfg: ModelConfig, spec, layout):
                         return h + y, (ck_n, cv_n)
 
                     x, (ck_n, cv_n) = jax.lax.scan(
-                        body, x, (params[name], cache[f"{name}_k"],
+                        body, x, (params[name], ls, cache[f"{name}_k"],
                                   cache[f"{name}_v"]))
                     new_cache[f"{name}_k"] = ck_n
                     new_cache[f"{name}_v"] = cv_n

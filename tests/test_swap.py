@@ -1,0 +1,199 @@
+"""Adapter-slot lifecycle edge cases and the hot-swap watcher.
+
+The invariants under test:
+
+  * blue/green version pinning — a request admitted before a hot swap
+    decodes its WHOLE completion on the pre-swap adapter, even while
+    later requests of the same tenant run the new one in the same pool;
+  * retire-with-inflight — removing a tenant refuses new submits at
+    once but drains queued + in-flight work before the adapter slot
+    recycles;
+  * slot exhaustion — a tenant beyond `max_tenants` waits FIFO (its
+    requests defer admission, mirroring the paged plane's reservation
+    semantics) and is admitted the moment a drain frees a slot;
+  * the `AdapterWatcher` only ever installs VERIFIED publishes, skips
+    bitwise-identical re-publishes, and its installs read back
+    crc32-equal to the manifest.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import save_checkpoint
+from repro.configs import get_config
+from repro.core.spec import init_params
+from repro.launch.engine import DecodeEngine
+from repro.launch.inputs import synthetic_requests
+from repro.launch.swap import AdapterWatcher
+from repro.models.transformer import build_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = dataclasses.replace(get_config("tiny"), lora_rank=4)
+    model = build_model(cfg)
+    params = init_params(model.spec, jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _adapter(model, seed, scale=0.05):
+    flat, td = jax.tree_util.tree_flatten(
+        model.spec["lora"], is_leaf=lambda v: hasattr(v, "init"))
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(flat))
+    return jax.tree_util.tree_unflatten(
+        td, [jax.random.normal(k, p.shape, jnp.float32) * scale
+             for k, p in zip(ks, flat)])
+
+
+def _engine(model, params, **kw):
+    kw.setdefault("num_slots", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("prefill_chunk", 4)
+    return DecodeEngine(model, params, **kw)
+
+
+def _alone(model, params, adapters, prompt, gen):
+    e = _engine(model, params, max_tenants=1)
+    t = e.add_tenant(adapters)
+    rid = e.submit(prompt, max_new_tokens=gen, tenant=t)
+    return e.run()[rid].tokens
+
+
+def test_swap_mid_decode_pins_inflight_to_old_version(setup):
+    cfg, model, params = setup
+    ad1, ad2 = _adapter(model, 1), _adapter(model, 2)
+    reqs = synthetic_requests(cfg.vocab_size, 2, min_len=4, max_len=6,
+                              seed=4)
+    eng = _engine(model, params, max_tenants=3)
+    t = eng.add_tenant(ad1)
+    r_old = eng.submit(reqs[0], max_new_tokens=10, tenant=t)
+    for _ in range(3):
+        eng.step()               # r_old is mid-decode on v1
+    eng.update_adapter(t, ad2)   # blue/green: v1 keeps its slot, draining
+    r_new = eng.submit(reqs[1], max_new_tokens=10, tenant=t)
+    done = eng.run()
+    assert done[r_old].tokens == _alone(model, params, ad1, reqs[0], 10), \
+        "in-flight request leaked onto the post-swap adapter"
+    assert done[r_new].tokens == _alone(model, params, ad2, reqs[1], 10)
+    # the drained v1 slot was recycled: both versions' slots accounted for
+    st = eng.tenant_stats(t)
+    assert st["version"] == 1 and st["swaps"] == 1
+    assert eng.num_free_adapter_slots == 2  # 3 slots, 1 live version
+
+
+def test_swap_while_queued_routes_to_new_version(setup):
+    """A request still in the queue (e.g. submitted just before a swap,
+    not yet through chunked prefill) binds its adapter at ADMISSION, so
+    it runs the new version — only already-admitted work drains on the
+    old one."""
+    cfg, model, params = setup
+    ad1, ad2 = _adapter(model, 1), _adapter(model, 2)
+    reqs = synthetic_requests(cfg.vocab_size, 1, min_len=9, max_len=12,
+                              seed=6)
+    eng = _engine(model, params, max_tenants=2)
+    t = eng.add_tenant(ad1)
+    rid = eng.submit(reqs[0], max_new_tokens=6, tenant=t)
+    eng.update_adapter(t, ad2)   # lands before any dispatch
+    done = eng.run()
+    assert done[rid].tokens == _alone(model, params, ad2, reqs[0], 6)
+
+
+def test_remove_tenant_drains_inflight_then_recycles_slot(setup):
+    cfg, model, params = setup
+    ad = _adapter(model, 3)
+    reqs = synthetic_requests(cfg.vocab_size, 3, min_len=3, max_len=6,
+                              seed=8)
+    eng = _engine(model, params, max_tenants=1)
+    t = eng.add_tenant(ad)
+    r0 = eng.submit(reqs[0], max_new_tokens=8, tenant=t)
+    r1 = eng.submit(reqs[1], max_new_tokens=8, tenant=t)  # queued behind
+    eng.step()                   # r0 (and r1) admitted / in flight
+    eng.remove_tenant(t)
+    assert eng.tenant_stats(t)["state"] == "retiring"
+    with pytest.raises(ValueError, match="retiring"):
+        eng.submit(reqs[2], max_new_tokens=2, tenant=t)
+    done = eng.run()             # drains BOTH on the tenant's adapter
+    assert done[r0].tokens == _alone(model, params, ad, reqs[0], 8)
+    assert done[r1].tokens == _alone(model, params, ad, reqs[1], 8)
+    assert eng.tenant_stats(t)["state"] == "removed"
+    assert eng.num_free_adapter_slots == 1
+    assert eng.remove_tenant(t) is None  # idempotent
+
+
+def test_adapter_slot_exhaustion_defers_fifo_until_drain(setup):
+    cfg, model, params = setup
+    ad = _adapter(model, 5)
+    reqs = synthetic_requests(cfg.vocab_size, 2, min_len=3, max_len=6,
+                              seed=10)
+    eng = _engine(model, params, max_tenants=1)
+    t0 = eng.add_tenant()
+    t1 = eng.add_tenant(ad)      # no slot: waits
+    assert eng.tenant_stats(t1)["state"] == "waiting"
+    r0 = eng.submit(reqs[0], max_new_tokens=4, tenant=t0)
+    r1 = eng.submit(reqs[1], max_new_tokens=4, tenant=t1)
+    eng.run(max_steps=12)        # t0 completes; t1's request holds FIFO
+    assert r0 in eng.completions() and r1 not in eng.completions()
+    assert eng.stats["adapter_slot_deferrals"] > 0
+    assert eng.num_pending == 1
+    eng.remove_tenant(t0)        # idle retire -> slot frees -> t1 admitted
+    done = eng.run()
+    assert eng.tenant_stats(t1)["state"] == "active"
+    assert done[r1].tokens == _alone(model, params, ad, reqs[1], 4)
+    # an UNBOUNDED run with a permanently stuck head raises instead of
+    # spinning (t1 now holds the only slot and nothing will free it)
+    t2 = eng.add_tenant()
+    eng.submit(reqs[0], max_new_tokens=2, tenant=t2)
+    with pytest.raises(RuntimeError, match="stalled"):
+        eng.run()
+
+
+def test_watcher_installs_verified_publishes_bitwise(setup, tmp_path):
+    cfg, model, params = setup
+    d = str(tmp_path / "publish")
+    eng = _engine(model, params, max_tenants=2)
+    t = eng.add_tenant()
+    w = AdapterWatcher(eng, t, d)
+    assert w.poll() is None                    # nothing published yet
+
+    ad1 = _adapter(model, 1)
+    save_checkpoint(d, 4, {"lora": ad1})
+    got = w.poll()
+    assert got is not None and got.step == 4 and got.verified
+    assert w.poll() is None                    # idempotent
+    save_checkpoint(d, 8, {"lora": ad1})       # identical re-publish
+    assert w.poll() is None and w.stats["skipped_unchanged"] == 1
+
+    ad2 = _adapter(model, 2)
+    save_checkpoint(d, 12, {"lora": ad2})
+    got = w.poll()
+    assert got.step == 12 and eng.tenant_stats(t)["version"] == 2
+    # the tenant now decodes exactly as ad2 served directly
+    reqs = synthetic_requests(cfg.vocab_size, 1, min_len=4, max_len=8,
+                              seed=12)
+    rid = eng.submit(reqs[0], max_new_tokens=5, tenant=t)
+    assert eng.run()[rid].tokens == _alone(model, params, ad2, reqs[0], 5)
+
+
+def test_watcher_ignores_torn_publish(setup, tmp_path):
+    """A corrupted newest step (bit-rot, torn write) is invisible: the
+    watcher keeps the tenant on the last verified version."""
+    import os
+    cfg, model, params = setup
+    d = str(tmp_path / "publish")
+    eng = _engine(model, params, max_tenants=1)
+    t = eng.add_tenant()
+    w = AdapterWatcher(eng, t, d)
+    save_checkpoint(d, 4, {"lora": _adapter(model, 1)})
+    assert w.poll().step == 4
+    save_checkpoint(d, 8, {"lora": _adapter(model, 2)})
+    shard = next(str(p) for p in sorted((tmp_path / "publish"
+                                         / "step_00000008").iterdir())
+                 if "shard" in p.name)
+    with open(shard, "r+b") as f:              # flip bytes mid-shard
+        f.seek(max(0, os.path.getsize(shard) // 2))
+        f.write(b"\xff\xff\xff\xff")
+    assert w.poll() is None                    # torn step never installs
+    assert w.installed_step == 4
